@@ -1,0 +1,55 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale 1]
+
+Sections:
+  [table1]  translation time per program (paper Table 1)
+  [fig3]    generated vs hand-written JAX per program (paper Figure 3)
+  [sec5]    packed/tiled matrices (paper §5)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1,
+                    help="dataset scale multiplier for fig3")
+    ap.add_argument("--sections", default="table1,fig3,sec5")
+    args = ap.parse_args()
+    sections = args.sections.split(",")
+
+    if "table1" in sections:
+        from benchmarks import translation_time
+        print("[table1] translation time (paper Table 1; "
+              "paper: DIABLO 5-14.5s, MOLD 11-340s, CASPER 10s-19h)")
+        print("name,translate_ms,first_run_ms")
+        for name, a, b in translation_time.rows():
+            print(f"{name},{a:.2f},{b:.1f}")
+        print()
+
+    if "fig3" in sections:
+        from benchmarks import programs
+        print("[fig3] generated vs hand-written (paper Figure 3)")
+        print("name,generated_us,handwritten_us,ratio")
+        for name, tg, th, r in programs.rows(args.scale):
+            print(f"{name},{tg:.0f},{th:.0f},{r:.2f}")
+        print()
+
+    if "sec5" in sections:
+        from benchmarks import tiled
+        print("[sec5] packed/tiled matrices (paper §5)")
+        print("name,us_per_call")
+        for name, t in tiled.rows():
+            print(f"{name},{t:.0f}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

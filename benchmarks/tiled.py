@@ -1,0 +1,64 @@
+"""Paper §5: packed (tiled) matrices.  Compares matmul on (a) the fused
+tiled path (block-sparse Pallas kernel on packed tiles), (b) unpack-then-
+einsum, and (c) dense einsum, at several block sparsities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(f, *args, reps=3):
+    f(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    from repro.core.tiles import matmul_tiled, pack, unpack
+
+    rng = np.random.default_rng(0)
+    d = 512
+    out = []
+    for sparsity in (0.0, 0.5, 0.9):
+        M = rng.standard_normal((d, d)).astype(np.float32)
+        tiles_mask = rng.random((d // 128, d // 128)) < sparsity
+        for i in range(d // 128):
+            for j in range(d // 128):
+                if tiles_mask[i, j]:
+                    M[i * 128:(i + 1) * 128, j * 128:(j + 1) * 128] = 0
+        N = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
+        tm = pack(jnp.asarray(M), 128, 128)
+
+        fused = jax.jit(lambda nn, _tm=tm: matmul_tiled(_tm, nn,
+                                                        interpret=True))
+        unfused = jax.jit(lambda nn, _tm=tm: unpack(_tm) @ nn)
+        dense = jax.jit(lambda nn, _m=jnp.asarray(M): _m @ nn)
+        np.testing.assert_allclose(np.asarray(fused(N)),
+                                   np.asarray(dense(N)), rtol=1e-3, atol=1e-2)
+        density = float(tm.mask.mean())
+        # NOTE: tiled_fused runs the Pallas kernel in INTERPRET mode (pure
+        # python) on this CPU container — its us_per_call is NOT comparable
+        # wall-clock; the TPU-relevant number is mxu_work = tile density
+        # (fraction of dense MXU flops the block-sparse kernel issues).
+        out.append((f"tiled_fused_sp{sparsity}_interp(mxu_work={density:.2f})",
+                    _timeit(fused, N)))
+        out.append((f"tiled_unpack_sp{sparsity}", _timeit(unfused, N)))
+        out.append((f"dense_sp{sparsity}", _timeit(dense, N)))
+    return out
+
+
+def main():
+    print("name,us_per_call")
+    for name, t in rows():
+        print(f"{name},{t:.0f}")
+
+
+if __name__ == "__main__":
+    main()

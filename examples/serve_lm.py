@@ -1,0 +1,20 @@
+"""Serving example: batched prefill + token-by-token decode with a KV
+cache, over any of the 10 architectures.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "16", "--gen", "8"])

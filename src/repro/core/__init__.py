@@ -1,0 +1,20 @@
+# DIABLO-JAX: the paper's primary contribution — translation of array-based
+# loops to distributed data-parallel programs — retargeted from Spark to JAX.
+#
+# Pipeline: @loop_program (Python-source frontend, paper Fig. 1 language)
+#   → analysis.check (Def. 3.1 restrictions)
+#   → translate (Fig. 2 rules E/K/D/U/S + Rule 2 unnesting + Rules 16/17)
+#   → lower (gather / segment-⊕ / axis-reduce / einsum physical plans)
+#   → distributed (shard_map execution over a device mesh)
+from .analysis import check
+from .frontend import (bag, dim, intscalar, loop_program, map_, matrix,
+                       parse_program, scalar, vector)
+from .interp import run as interpret
+from .loop_ast import Program, RejectionError
+from .lower import CompiledProgram, compile_program
+from .translate import translate
+
+__all__ = ["loop_program", "parse_program", "compile_program", "interpret",
+           "check", "translate", "CompiledProgram", "Program",
+           "RejectionError", "vector", "matrix", "map_", "bag", "dim",
+           "scalar", "intscalar"]

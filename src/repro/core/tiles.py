@@ -1,0 +1,65 @@
+"""Packed (tiled) matrices — paper §5.
+
+A TiledMatrix stores MXU-aligned [bm, bn] dense tiles plus a tile-presence
+mask.  `pack`/`unpack` are the paper's conversion comprehensions; the
+compiler FUSES them away: when a tiled matrix flows into the matmul-shaped
+contraction the einsum recognizer emits the block-sparse Pallas
+`tile_matmul` directly on the packed representation (no unpack), which is
+the §5 claim ("programs directly access the packed structures").  Any other
+access unpacks on the fly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TiledMatrix:
+    tiles: jax.Array       # [Mt, Nt, bm, bn]
+    mask: jax.Array        # [Mt, Nt] (1 = tile present)
+    shape: tuple[int, int]  # logical (un-padded) shape
+
+    @property
+    def tile_shape(self):
+        return self.tiles.shape[2], self.tiles.shape[3]
+
+
+def pack(m: jax.Array, bm: int = 128, bn: int = 128,
+         prune_zero: bool = True) -> TiledMatrix:
+    """Dense/sparse matrix -> tiles (paper's pack(M) comprehension)."""
+    h, w = m.shape
+    hp, wp = -(-h // bm) * bm, -(-w // bn) * bn
+    mp = jnp.zeros((hp, wp), m.dtype).at[:h, :w].set(m)
+    tiles = mp.reshape(hp // bm, bm, wp // bn, bn).transpose(0, 2, 1, 3)
+    if prune_zero:
+        mask = (jnp.abs(tiles).sum(axis=(2, 3)) > 0).astype(jnp.float32)
+    else:
+        mask = jnp.ones(tiles.shape[:2], jnp.float32)
+    return TiledMatrix(tiles, mask, (h, w))
+
+
+def unpack(t: TiledMatrix) -> jax.Array:
+    """Tiles -> dense matrix (paper's unpack(N) comprehension)."""
+    mt, nt, bm, bn = t.tiles.shape
+    tiles = t.tiles * t.mask[:, :, None, None].astype(t.tiles.dtype)
+    full = tiles.transpose(0, 2, 1, 3).reshape(mt * bm, nt * bn)
+    return full[:t.shape[0], :t.shape[1]]
+
+
+def matmul_tiled(a: TiledMatrix, b, *, interpret=None) -> jax.Array:
+    """Block-sparse matmul on the packed representation via the Pallas
+    tile_matmul kernel (mask skips absent tiles)."""
+    from ..kernels import ops
+    bm, bk = a.tile_shape
+    bdense = unpack(b) if isinstance(b, TiledMatrix) else b
+    mt, kt, _, _ = a.tiles.shape
+    a_dense = a.tiles.transpose(0, 2, 1, 3).reshape(mt * bm, kt * bk)
+    kw = {} if interpret is None else {"interpret": interpret}
+    kp = a_dense.shape[1]
+    b_p = jnp.zeros((kp, bdense.shape[1]), bdense.dtype) \
+        .at[:bdense.shape[0]].set(bdense)
+    out = ops.tile_matmul(a_dense, b_p, tile_mask=a.mask, bm=bm, bk=bk, **kw)
+    return out[:a.shape[0]]

@@ -1,0 +1,3 @@
+from .ops import flash_attention, segment_sum, selective_scan, tile_matmul
+
+__all__ = ["segment_sum", "tile_matmul", "flash_attention", "selective_scan"]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for flash_attention."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        sq, sk = s.shape[1], s.shape[2]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

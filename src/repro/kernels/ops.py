@@ -1,0 +1,37 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+`interpret` defaults to True off-TPU (the container is CPU-only; Pallas
+kernels are authored for TPU and validated in interpret mode against the
+pure-jnp oracles in *_ref.py)."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .selective_scan import selective_scan as _selscan
+from .segment_reduce import segment_sum as _segsum
+from .tile_matmul import tile_matmul as _tilemm
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def segment_sum(ids, values, num_segments: int, **kw):
+    kw.setdefault("interpret", _interp())
+    return _segsum(ids, values, num_segments, **kw)
+
+
+def tile_matmul(a, b, tile_mask=None, **kw):
+    kw.setdefault("interpret", _interp())
+    return _tilemm(a, b, tile_mask=tile_mask, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interp())
+    return _flash(q, k, v, **kw)
+
+
+def selective_scan(a, bx, c, **kw):
+    kw.setdefault("interpret", _interp())
+    return _selscan(a, bx, c, **kw)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: segment-sum via one-hot MXU matmul.
+
+This is the TPU-native form of the paper's group-by-⊕: instead of a shuffle
+(Spark) or a scatter (GPU), each [bn] block of segment ids becomes a
+[bn, bk] one-hot matrix that multiplies the [bn, bd] value block on the
+MXU — group-by as matrix multiplication.  Out-of-range ids contribute
+nothing (drop semantics, matching the ◁ merge).
+
+Grid: (K/bk, D/bd, N/bn), N innermost so each output tile accumulates
+across value blocks in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ids_ref, val_ref, out_ref, *, bk: int):
+    k = pl.program_id(0)
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]                                    # [bn]
+    vals = val_ref[...].astype(jnp.float32)               # [bn, bd]
+    seg0 = k * bk
+    onehot = (ids[:, None] == (seg0 + jax.lax.broadcasted_iota(
+        jnp.int32, (1, bk), 1))).astype(jnp.float32)      # [bn, bk]
+    out_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # [bk, bd]
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "bn", "bk",
+                                             "bd", "interpret"))
+def segment_sum(ids: jax.Array, values: jax.Array, num_segments: int,
+                *, bn: int = 256, bk: int = 128, bd: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """ids: [N] int32; values: [N, D] -> [num_segments, D] float32."""
+    n, d = values.shape
+    bn = min(bn, n)
+    bk = min(bk, num_segments)
+    bd = min(bd, d)
+    # pad to block multiples; padded rows get id = num_segments (dropped)
+    np_ = -(-n // bn) * bn
+    kp = -(-num_segments // bk) * bk
+    dp = -(-d // bd) * bd
+    ids_p = jnp.full((np_,), kp, jnp.int32).at[:n].set(ids.astype(jnp.int32))
+    vals_p = jnp.zeros((np_, dp), values.dtype).at[:n, :d].set(values)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk),
+        grid=(kp // bk, dp // bd, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda k, dd, nn: (nn,)),
+            pl.BlockSpec((bn, bd), lambda k, dd, nn: (nn, dd)),
+        ],
+        out_specs=pl.BlockSpec((bk, bd), lambda k, dd, nn: (k, dd)),
+        out_shape=jax.ShapeDtypeStruct((kp, dp), jnp.float32),
+        interpret=interpret,
+    )(ids_p, vals_p)
+    return out[:num_segments, :d]

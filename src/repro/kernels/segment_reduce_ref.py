@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the segment_sum kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(ids, values, num_segments: int):
+    ids = ids.astype(jnp.int32)
+    # paper empty-bag semantics: negative ids DROP (numpy-style .at[] would
+    # wrap them to the end)
+    ids = jnp.where(ids < 0, num_segments, ids)
+    vals = values.astype(jnp.float32)
+    out = jnp.zeros((num_segments,) + vals.shape[1:], jnp.float32)
+    return out.at[ids].add(vals, mode="drop")

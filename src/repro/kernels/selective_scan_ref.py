@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for selective_scan (matches models/ssm.py math)."""
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(a, bx, c):
+    """a, bx: [B,S,D,N]; c: [B,S,N] -> y [B,S,D]."""
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a = a.astype(jnp.float32)
+    bx = bx.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(assoc, (a, bx), axis=1)
+    return jnp.einsum("bsdn,bsn->bsd", h, c.astype(jnp.float32))

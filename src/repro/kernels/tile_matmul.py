@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: tiled matmul (paper §5 packed arrays).
+
+C[M,N] = A[M,K] @ B[K,N] with MXU-aligned [bm, bk] x [bk, bn] tiles and
+fp32 accumulation in the revisited output tile (grid (m, n, k), k
+innermost).  `tile_mask` supports block-sparse tiled matrices: a zero mask
+tile contributes nothing (multiplied out — a TPU grid cannot skip blocks
+dynamically without scalar prefetch, so this kernel masks; the sparsity
+win on TPU is the *pack* step producing fewer tiles, see core/tiles.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _masked_kernel(mask_ref, a_ref, b_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    m = mask_ref[0, 0].astype(jnp.float32)
+    out_ref[...] += m * jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def tile_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+                bk: int = 128, tile_mask: jax.Array | None = None,
+                interpret: bool = True) -> jax.Array:
+    """a: [M,K]; b: [K,N] -> [M,N] fp32.  tile_mask: [M/bm, K/bk] optional."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = (-(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk)
+    ap = jnp.zeros((mp, kp), a.dtype).at[:m, :k].set(a)
+    bp = jnp.zeros((kp, np_), b.dtype).at[:k, :n].set(b)
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    if tile_mask is None:
+        out = pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                      pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+        )(ap, bp)
+    else:
+        out = pl.pallas_call(
+            _masked_kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk)),
+                      pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                      pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+        )(tile_mask.astype(jnp.float32), ap, bp)
+    return out[:m, :n]

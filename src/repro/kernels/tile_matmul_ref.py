@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for tile_matmul."""
+import jax.numpy as jnp
+
+
+def tile_matmul_ref(a, b, tile_mask=None, bm: int = 128, bk: int = 128):
+    a = a.astype(jnp.float32)
+    if tile_mask is not None:
+        mt, kt = tile_mask.shape
+        mask = jnp.repeat(jnp.repeat(tile_mask.astype(jnp.float32), bm, 0),
+                          bk, 1)[:a.shape[0], :a.shape[1]]
+        a = a * mask
+    return a @ b.astype(jnp.float32)

@@ -1,0 +1,24 @@
+"""Enumeration of the 40 assigned (architecture x shape) dry-run cells,
+with the mandated skips (long_500k needs sub-quadratic attention)."""
+from __future__ import annotations
+
+from ..configs import SHAPES, get_config, list_archs
+
+# families allowed to run long_500k (sub-quadratic sequence mixing)
+_SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.family not in _SUBQUADRATIC:
+        return "full quadratic attention at 524288 ctx — skipped per assignment"
+    return None
+
+
+def all_cells() -> list[tuple[str, str, str | None]]:
+    """[(arch, shape, skip_reason)] — 40 rows."""
+    out = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            out.append((arch, shape, skip_reason(arch, shape)))
+    return out

@@ -1,0 +1,97 @@
+"""Render results/dryrun/*.json into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 1e9:.2f}"
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}µs"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(dirname):
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        r = json.load(open(f))
+        recs[r["cell"]] = r
+    return recs
+
+
+def roofline_table(recs, mesh="pod16x16", tag=None) -> str:
+    rows = ["| arch | shape | compute | memory | collective | bound | "
+            "bytes/dev (TPU-est) GB | MODEL_FLOPs/HLO_FLOPs | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for cell, r in sorted(recs.items()):
+        if r.get("mesh") != mesh and r.get("status") != "skipped":
+            continue
+        if r.get("status") == "skipped":
+            if mesh == "pod16x16" and "pod16x16" in cell:
+                a, s, _ = cell.split("__")[:3]
+                rows.append(f"| {a} | {s} | - | - | - | skipped | - | - | - |")
+            continue
+        if tag is not None and r.get("overrides"):
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(ro['compute_s'])} | "
+            f"{_fmt_s(ro['memory_s'])} | {_fmt_s(ro['collective_s'])} | "
+            f"{ro['dominant']} | {_fmt_bytes(r.get('bytes_per_device_tpu_est'))} | "
+            f"{ro['useful_ratio']:.3f} | {ro['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def multipod_table(recs) -> str:
+    rows = ["| arch | shape | compile_s | bytes/dev GB | collective GB/chip | "
+            "per-chip FLOPs vs 1-pod |", "|---|---|---|---|---|---|"]
+    for cell, r in sorted(recs.items()):
+        if r.get("mesh") != "pod2x16x16" or r.get("status") != "ok":
+            continue
+        single = recs.get(cell.replace("pod2x16x16", "pod16x16"), {})
+        ratio = "-"
+        if single.get("status") == "ok":
+            a = r["roofline"]["hlo_flops_per_chip"]
+            b = single["roofline"]["hlo_flops_per_chip"]
+            ratio = f"{a / b:.2f}x"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
+            f"{_fmt_bytes(r.get('bytes_per_device_tpu_est'))} | "
+            f"{r['hlo_stats']['collective_bytes'] / 1e9:.1f} | {ratio} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    n_ok = sum(r.get("status") == "ok" for r in recs.values())
+    n_skip = sum(r.get("status") == "skipped" for r in recs.values())
+    print(f"cells: {len(recs)} ({n_ok} ok, {n_skip} skipped)\n")
+    print("### Single-pod (16x16 = 256 chips) baseline roofline\n")
+    print(roofline_table(recs, "pod16x16"))
+    print("\n### Multi-pod (2x16x16 = 512 chips) dry-run\n")
+    print(multipod_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serving launcher: batched prefill + decode loop with KV/state cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from ..configs import get_config, smoke_config
+    from ..models import get_model
+    from ..serve import make_decode_step, make_prefill_step
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    params = model.init(args.seed)
+    rng = np.random.default_rng(args.seed)
+    max_seq = args.prompt_len + args.gen
+
+    batch = {"tokens": rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = rng.standard_normal(
+            (args.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        batch["pos_ids"] = np.broadcast_to(
+            np.arange(args.prompt_len, dtype=np.int32)[None, :, None],
+            (args.batch, args.prompt_len, 3)).copy()
+
+    prefill = jax.jit(make_prefill_step(cfg, max_seq))
+    decode = jax.jit(make_decode_step(cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [np.asarray(tok)]
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.asarray(args.prompt_len + i, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok))
+    dt = time.time() - t0
+    gen = np.concatenate(out, axis=1)
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} generated={gen.shape[1]} tokens "
+          f"in {dt:.2f}s ({args.batch * gen.shape[1] / dt:.1f} tok/s)")
+    print("[serve] sample token ids:", gen[0][:12].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

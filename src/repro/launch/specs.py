@@ -1,0 +1,78 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+zero allocation) for every model input of every (arch x shape) cell, plus
+the matching PartitionSpecs.  Used by the dry-run and the launchers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import SHAPES, get_config
+from ..models import get_model
+from ..optim.adamw import AdamWState
+
+I32 = jnp.int32
+
+
+def _dp(dp_axes, n, dp_n):
+    """dp spec entry only when the dim divides the dp extent."""
+    return tuple(dp_axes) if dp_n > 1 and n % dp_n == 0 else None
+
+
+def input_specs(arch: str, shape_name: str, *, axis_sizes=None,
+                dp_axes=("data",)):
+    """Returns (specs, pspecs) dicts for the cell's step function inputs
+    (excluding params/opt-state, which come from the model)."""
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    axis_sizes = axis_sizes or {}
+    dp_n = 1
+    for a in dp_axes:
+        dp_n *= axis_sizes.get(a, 1)
+    b, s = shp.global_batch, shp.seq_len
+    model = get_model(cfg)
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, I32)
+
+    specs: dict = {}
+    pspecs: dict = {}
+    bspec = _dp(dp_axes, b, dp_n)
+
+    if shp.kind == "train":
+        specs["tokens"] = tok((b, s))
+        specs["labels"] = tok((b, s))
+        pspecs["tokens"] = P(bspec, None)
+        pspecs["labels"] = P(bspec, None)
+    elif shp.kind == "prefill":
+        specs["tokens"] = tok((b, s))
+        pspecs["tokens"] = P(bspec, None)
+    else:  # decode: one new token with a cache of seq_len
+        specs["token"] = tok((b, 1))
+        specs["pos"] = jax.ShapeDtypeStruct((), I32)
+        pspecs["token"] = P(bspec, None)
+        pspecs["pos"] = P()
+        cache = model.cache_defs(b, s)
+        specs["cache"] = cache
+        pspecs["cache"] = model.cache_pspecs(cache, axis_sizes, dp_axes)
+
+    if cfg.family == "vlm" and shp.kind != "decode":
+        specs["pos_ids"] = tok((b, s, 3))
+        pspecs["pos_ids"] = P(bspec, None, None)
+    if cfg.family == "audio" and shp.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model),
+                                               jnp.float32)
+        pspecs["frames"] = P(bspec, None, None)
+    return specs, pspecs
+
+
+def opt_state_specs(params_abs, dtype=jnp.float32):
+    mk = lambda p: jax.ShapeDtypeStruct(p.shape, dtype)
+    return AdamWState(jax.ShapeDtypeStruct((), I32),
+                      jax.tree.map(mk, params_abs),
+                      jax.tree.map(mk, params_abs))
+
+
+def opt_state_pspecs(param_pspecs):
+    return AdamWState(P(), param_pspecs, param_pspecs)

@@ -1,0 +1,69 @@
+"""Sweep driver: run every (arch x shape x mesh) dry-run cell in an
+isolated subprocess (fresh XLA state per cell; one failure can't kill the
+sweep).  Resumable: cells with an existing ok/skipped JSON are not re-run.
+
+  PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def cell_done(out_dir: str, arch: str, shape: str, mesh_name: str) -> bool:
+    f = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+    if not os.path.exists(f):
+        return False
+    try:
+        return json.load(open(f)).get("status") in ("ok", "skipped")
+    except Exception:
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--only-mesh", choices=["single", "multi"], default=None)
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--baseline", action="store_true")
+    args = ap.parse_args()
+
+    from ..launch.cells import all_cells
+    meshes = [("pod16x16", []), ("pod2x16x16", ["--multi-pod"])]
+    if args.only_mesh == "single":
+        meshes = meshes[:1]
+    if args.only_mesh == "multi":
+        meshes = meshes[1:]
+
+    todo = []
+    for mesh_name, flags in meshes:
+        for arch, shape, _skip in all_cells():
+            if not cell_done(args.out, arch, shape, mesh_name):
+                todo.append((arch, shape, mesh_name, flags))
+    print(f"[sweep] {len(todo)} cells to run", flush=True)
+
+    t0 = time.time()
+    fails = 0
+    for i, (arch, shape, mesh_name, flags) in enumerate(todo):
+        t1 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", args.out] + flags + \
+            (["--baseline"] if args.baseline else [])
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=args.timeout,
+                           env={**os.environ, "PYTHONPATH": "src"})
+        status = "ok" if r.returncode == 0 else "FAIL"
+        fails += status == "FAIL"
+        print(f"[sweep {i+1}/{len(todo)}] {arch} {shape} {mesh_name}: {status} "
+              f"({time.time()-t1:.0f}s, total {time.time()-t0:.0f}s)", flush=True)
+        if status == "FAIL":
+            print(r.stdout[-2000:], r.stderr[-2000:], flush=True)
+    print(f"[sweep] done, {fails} failures", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from .lm import LM
+from .whisper import Whisper
+
+
+def get_model(cfg):
+    """Facade: the right model class for a config."""
+    return Whisper(cfg) if cfg.family == "audio" else LM(cfg)
+
+
+__all__ = ["LM", "Whisper", "get_model"]

@@ -1,0 +1,275 @@
+"""GQA attention: global-causal, local-window (sliding), bidirectional
+(encoder) and cross-attention variants, with chunked (flash-style, O(chunk)
+memory) computation for long sequences and ring-buffer caches for local
+attention so `long_500k` decode stays O(window).
+
+TP strategy: KV heads are repeated to the full query-head count before the
+score einsum, so the head dim shards cleanly at 16-way TP even when
+num_kv_heads < 16 (each shard effectively holds a KV-head replica — the
+standard GQA + wide-TP layout).  Explicit sharding constraints pin batch to
+the dp axes and heads to `model`; their transposes pin the backward
+cotangents, which otherwise get all-gathered by GSPMD (observed: a 217 GB
+logits gather on whisper before these constraints).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, apply_mrope, apply_rope, constrain, dense
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg, *, cross: bool = False) -> dict[str, ParamDef]:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    defs = {
+        "wq": ParamDef((d, hq * hd), ("embed", "qkv"), dt),
+        "wk": ParamDef((d, hkv * hd), ("embed", "qkv"), dt),
+        "wv": ParamDef((d, hkv * hd), ("embed", "qkv"), dt),
+        "wo": ParamDef((hq * hd, d), ("qkv", "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((hq * hd,), ("qkv",), dt, init="zeros")
+        defs["bk"] = ParamDef((hkv * hd,), ("qkv",), dt, init="zeros")
+        defs["bv"] = ParamDef((hkv * hd,), ("qkv",), dt, init="zeros")
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _scores_mask(q_pos, k_pos, *, causal: bool, window: int):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _repeat_kv(k, v, hq):
+    g = hq // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    return k, v
+
+
+def _msize(mesh) -> int:
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def _attend(q, k, v, q_pos, k_pos, *, causal, window, mesh=None, dp=("data",), sp=True):
+    """q: [B,Sq,Hq,hd]; k,v: [B,Sk,Hkv,hd] -> [B,Sq,Hq,hd].  fp32 softmax.
+
+    TP layout: scores shard over heads when Hq divides the model axis;
+    otherwise over the QUERY-SEQUENCE dim (SP attention) — without this,
+    archs whose head count doesn't divide 16 (minitron 24H, phi3 40H,
+    whisper 6H) run attention 16x redundantly on the model axis (measured:
+    75% of minitron's train flops; see EXPERIMENTS.md §Perf)."""
+    b, sq, hq, hd = q.shape
+    k, v = _repeat_kv(k, v, hq)
+    heads_tp = hq % _msize(mesh) == 0 or not sp
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    if heads_tp:
+        scores = constrain(scores * (hd ** -0.5), mesh, dp, "model", None, None)
+    else:
+        scores = constrain(scores * (hd ** -0.5), mesh, dp, None, "model", None)
+    mask = _scores_mask(q_pos, k_pos, causal=causal, window=window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v)
+    if heads_tp:
+        return constrain(out, mesh, dp, None, "model", None)
+    return constrain(out, mesh, dp, "model", None, None)
+
+
+def attention_core(q, k, v, *, causal=True, window=0, q_offset=0,
+                   chunk_q=1024, mesh=None, dp=("data",), sp=True):
+    """Full-sequence attention; scans over query chunks when Sq is large.
+
+    For local-window attention the kv tensor is sliced per chunk so both
+    memory AND flops are O(S * window) — genuinely sub-quadratic.
+    """
+    b, sq = q.shape[0], q.shape[1]
+    sk = k.shape[1]
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    if sq <= chunk_q or sq % chunk_q != 0:
+        return _attend(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                       mesh=mesh, dp=dp, sp=sp)
+
+    n_chunks = sq // chunk_q
+    qc = q.reshape(b, n_chunks, chunk_q, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+    if window > 0 and window + chunk_q < sk:
+        span = window + chunk_q  # kv span each query chunk can see
+
+        def chunk_fn(_, args):
+            i, qi = args
+            start = jnp.maximum(i * chunk_q - window, 0)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            qp = q_offset + i * chunk_q + jnp.arange(chunk_q)
+            kp = start + jnp.arange(span)
+            return None, _attend(qi, ks, vs, qp, kp, causal=causal,
+                                 window=window, mesh=mesh, dp=dp, sp=sp)
+    else:
+        def chunk_fn(_, args):
+            i, qi = args
+            qp = q_offset + i * chunk_q + jnp.arange(chunk_q)
+            return None, _attend(qi, k, v, qp, k_pos, causal=causal,
+                                 window=window, mesh=mesh, dp=dp, sp=sp)
+
+    _, out = jax.lax.scan(chunk_fn, None, (jnp.arange(n_chunks), qc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, *q.shape[2:])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg, p, x, mesh, dp):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, s, hq, hd)
+    k = dense(x, p["wk"], p.get("bk")).reshape(b, s, hkv, hd)
+    v = dense(x, p["wv"], p.get("bv")).reshape(b, s, hkv, hd)
+    if hq % _msize(mesh) == 0 or not cfg.sp_attn:
+        q = constrain(q, mesh, dp, None, "model", None)
+    else:  # SP fallback: shard the sequence dim instead of heads
+        q = constrain(q, mesh, dp, "model", None, None)
+    k = constrain(k, mesh, dp, None, "model", None)
+    v = constrain(v, mesh, dp, None, "model", None)
+    return q, k, v
+
+
+def _rope(cfg, q, k, pos, pos_ids):
+    if cfg.pos_embed != "rope":
+        return q, k
+    if cfg.mrope_sections and pos_ids is not None:
+        q = apply_mrope(q, pos_ids, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos_ids, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k
+
+
+def attn_cache_defs(cfg, batch: int, max_seq: int, *, window: int = 0):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    s = min(window, max_seq) if window > 0 else max_seq
+    shp = (batch, s, hkv, hd)
+    return {"k": jax.ShapeDtypeStruct(shp, cfg.cache_dtype),
+            "v": jax.ShapeDtypeStruct(shp, cfg.cache_dtype)}
+
+
+def attn_forward(cfg, p, x, *, window=0, causal=True, pos_ids=None,
+                 mesh=None, dp=("data",)):
+    """Training / encoder forward (no cache). x: [B,S,d]."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, mesh, dp)
+    pos = jnp.arange(s)
+    q, k = _rope(cfg, q, k, pos, pos_ids)
+    out = attention_core(q, k, v, causal=causal, window=window,
+                         chunk_q=cfg.attn_chunk, mesh=mesh, dp=dp,
+                         sp=cfg.sp_attn)
+    return dense(out.reshape(b, s, -1), p["wo"])
+
+
+def attn_prefill(cfg, p, x, cache, *, window=0, pos_ids=None, mesh=None,
+                 dp=("data",)):
+    """Prefill: run causal attention AND fill the cache. Returns (y, cache)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, mesh, dp)
+    pos = jnp.arange(s)
+    q, k = _rope(cfg, q, k, pos, pos_ids)
+    out = attention_core(q, k, v, causal=True, window=window,
+                         chunk_q=cfg.attn_chunk, mesh=mesh, dp=dp,
+                         sp=cfg.sp_attn)
+    w = cache["k"].shape[1]
+    if window > 0 and w < s:          # ring buffer keeps the last `w` steps
+        new_cache = {"k": k[:, s - w:].astype(cache["k"].dtype),
+                     "v": v[:, s - w:].astype(cache["v"].dtype)}
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros_like(cache["k"]), k.astype(cache["k"].dtype), 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros_like(cache["v"]), v.astype(cache["v"].dtype), 0, axis=1)
+        new_cache = {"k": kc, "v": vc}
+    return dense(out.reshape(b, s, -1), p["wo"]), new_cache
+
+
+def attn_decode(cfg, p, x, cache, pos, *, window=0, pos_ids=None, mesh=None,
+                dp=("data",)):
+    """One-token decode. x: [B,1,d]; pos: scalar int32 (tokens so far).
+
+    Global attention: cache [B, S_max, Hkv, hd], seq-sharded over `model`
+    (baseline; the flash-combine shard_map variant is the perf hillclimb).
+    Local attention: ring buffer [B, W, Hkv, hd] indexed pos % W.
+    """
+    b = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, 1, hq, hd)
+    k = dense(x, p["wk"], p.get("bk")).reshape(b, 1, hkv, hd)
+    v = dense(x, p["wv"], p.get("bv")).reshape(b, 1, hkv, hd)
+    q, k = _rope(cfg, q, k, pos[None] if pos.ndim == 0 else pos, pos_ids)
+
+    cap = cache["k"].shape[1]
+    slot = jnp.mod(pos, cap) if window > 0 else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    kc = constrain(kc, mesh, dp, "model", None, None)
+    vc = constrain(vc, mesh, dp, "model", None, None)
+
+    idx = jnp.arange(cap)
+    if window > 0:
+        age = jnp.mod(slot - idx, cap)          # 0 = current token
+        k_abs = pos - age
+        valid = (k_abs >= 0) & (age < jnp.minimum(window, cap))
+    else:
+        valid = idx <= pos
+    kf, vf = _repeat_kv(kc.astype(q.dtype), vc.astype(q.dtype), hq)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, kf).astype(jnp.float32)
+    # keep scores SEQUENCE-sharded: softmax over the sharded axis then
+    # reduces to scalar-sized all-reduces (flash-combine), instead of
+    # all-gathering the multi-GB KV cache to shard by heads
+    scores = constrain(scores * (hd ** -0.5), mesh, dp, None, None, "model")
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(vf.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, vf).reshape(b, 1, hq * hd)
+    return dense(out.astype(x.dtype), p["wo"]), {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_forward(cfg, p, x, enc_kv, mesh=None, dp=("data",)):
+    """x: [B,S,d]; enc_kv: (k, v) precomputed from encoder output."""
+    b, s, _ = x.shape
+    hq, hd = cfg.num_heads, cfg.head_dim
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, s, hq, hd)
+    q = constrain(q, mesh, dp, None, "model", None)
+    k, v = enc_kv
+    out = attention_core(q, k, v, causal=False, chunk_q=cfg.attn_chunk,
+                         mesh=mesh, dp=dp)
+    return dense(out.reshape(b, s, -1), p["wo"])
+
+
+def cross_kv(cfg, p, enc_out):
+    b, s, _ = enc_out.shape
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = dense(enc_out, p["wk"], p.get("bk")).reshape(b, s, hkv, hd)
+    v = dense(enc_out, p["wv"], p.get("bv")).reshape(b, s, hkv, hd)
+    return k, v

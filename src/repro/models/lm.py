@@ -1,0 +1,254 @@
+"""Decoder-only LM: embedding -> scanned layer groups -> head.
+
+Layers are stacked per `layout` group and iterated with `lax.scan` (one
+compiled body per group) so 80-layer models compile in one-layer time.
+Remat (activation checkpointing) wraps the scan body; policy set by
+cfg.remat ("full" | "dots" | "none").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .blocks import block_cache_defs, block_decode, block_defs, block_forward, \
+    block_prefill
+from .common import ParamDef, constrain, is_def, rms_norm, tree_abstract, \
+    tree_init, tree_pspecs
+
+
+def _stack(defs, reps: int):
+    return jax.tree.map(
+        lambda d: ParamDef((reps,) + d.shape, ("layers",) + d.logical,
+                           d.dtype, d.init),
+        defs, is_leaf=is_def)
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def chunked_ce(cfg, head_fn, x, labels):
+    """Fused cross-entropy: scan over sequence chunks, rematerializing the
+    [B, chunk, V] logits in backward instead of saving [B, S, V] fp32 (the
+    dominant memory term for big-vocab / unshardable-vocab models)."""
+    b, s, _ = x.shape
+    chunk = min(cfg.ce_chunk, s)
+    if s % chunk != 0 or s == chunk:
+        logits = head_fn(x)
+        ls = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(ls - true)
+    nc = s // chunk
+    xs = x.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    ys = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, args):
+        xc, yc = args
+        logits = head_fn(xc)
+        ls = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((ls - true).astype(jnp.float32)), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ys))
+    return total / (b * s)
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def residual_spec(cfg):
+    """Sharding of the inter-block residual stream [B, S, d].
+
+    Attention-family archs: sequence-parallel (Megatron-SP) — the remat-saved
+    per-layer carries shrink by the TP degree.  SSM/hybrid: the recurrence
+    runs over S, so shard the channel dim instead (d_model is elementwise
+    through the scan).  `constrain` drops non-divisible entries (decode S=1).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        return (None, "model")
+    return ("model", None)
+
+
+class LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ---------------- params ----------------
+    def defs(self):
+        cfg = self.cfg
+        embed_logical = ("vocab", "embed") if cfg.shard_embed_vocab \
+            else ("none", "embed")
+        d = {"embed": ParamDef((cfg.vocab_size, cfg.d_model), embed_logical,
+                               cfg.param_dtype, init="normal"),
+             "final_norm": ParamDef((cfg.d_model,), ("embed",), jnp.float32,
+                                    init="zeros"),
+             "lm_head": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                 cfg.param_dtype)}
+        for gi, (pattern, reps) in enumerate(cfg.layout):
+            d[f"g{gi}"] = {f"s{i}_{kind}": _stack(block_defs(cfg, kind), reps)
+                           for i, kind in enumerate(pattern)}
+        return d
+
+    def abstract_params(self):
+        return tree_abstract(self.defs())
+
+    def pspecs(self, axis_sizes):
+        return tree_pspecs(self.defs(), axis_sizes)
+
+    def init(self, seed: int = 0):
+        return tree_init(self.defs(), seed)
+
+    # ---------------- caches ----------------
+    def cache_defs(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        caches = {}
+        for gi, (pattern, reps) in enumerate(cfg.layout):
+            caches[f"g{gi}"] = {
+                f"s{i}_{kind}": jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype),
+                    block_cache_defs(cfg, kind, batch, max_seq))
+                for i, kind in enumerate(pattern)}
+        return caches
+
+    def init_cache(self, batch: int, max_seq: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_defs(batch, max_seq))
+
+    def cache_pspecs(self, cache_tree, axis_sizes, dp_axes=("data",)):
+        """Cache sharding for a concrete (abstract) cache tree: batch over
+        dp; global-attn KV *sequence* over `model` (GQA kv-head counts don't
+        divide 16-way TP); recurrent state over `model` on the channel dim.
+        Shapes are [layers, batch, ...] (stacked for the group scans)."""
+        model_n = axis_sizes.get("model", 1)
+        dp_n = 1
+        for a in (dp_axes if isinstance(dp_axes, tuple) else (dp_axes,)):
+            dp_n *= axis_sizes.get(a, 1)
+
+        def spec_for(leaf_name, shape):
+            dp = dp_axes if shape[1] % dp_n == 0 and dp_n > 1 else None
+            def m(dim):
+                return "model" if model_n > 1 and shape[dim] % model_n == 0 else None
+            if leaf_name in ("k", "v"):           # [L, B, S, Hkv, hd]
+                return P(None, dp, m(2), None, None)
+            if leaf_name == "conv":               # [L, B, k-1, ch]
+                return P(None, dp, None, m(3))
+            if leaf_name == "h":                  # [L,B,ch] or [L,B,ch,N]
+                base = (None, dp, m(2))
+                return P(*base) if len(shape) == 3 else P(*base, None)
+            return P()
+
+        def walk_named(tree):
+            res = {}
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    res[k] = walk_named(v)
+                else:
+                    res[k] = spec_for(k, v.shape)
+            return res
+        return walk_named(cache_tree)
+
+    # ---------------- backbone ----------------
+    def _embed(self, params, tokens, mesh, dp_axes):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+        return _constrain(x, mesh, P(dp_axes, None, None))
+
+    def _head(self, params, x, mesh=None, dp_axes=("data",)):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("...d,dv->...v", x, params["lm_head"]).astype(jnp.float32)
+        # pin batch to dp / vocab to model — the transpose of this constraint
+        # stops GSPMD from all-gathering the logits cotangent over batch
+        logits = constrain(logits, mesh, dp_axes, None, "model")
+        if cfg.logits_softcap:
+            c = cfg.logits_softcap
+            logits = c * jnp.tanh(logits / c)
+        return logits
+
+    def _forward(self, params, x, mesh, dp_axes, pos_ids):
+        cfg = self.cfg
+        for gi, (pattern, reps) in enumerate(cfg.layout):
+            gp = params[f"g{gi}"]
+
+            def body(carry, ps, _pattern=pattern):
+                h = constrain(carry, mesh, dp_axes, *residual_spec(cfg))
+                for i, kind in enumerate(_pattern):
+                    h = block_forward(cfg, kind, ps[f"s{i}_{kind}"], h,
+                                      mesh=mesh, dp_axes=dp_axes, pos_ids=pos_ids)
+                return constrain(h, mesh, dp_axes, *residual_spec(cfg)), None
+
+            x, _ = jax.lax.scan(_remat(cfg, body), x, gp)
+        return x
+
+    # ---------------- public entry points ----------------
+    def loss(self, params, batch, mesh=None, dp_axes=("data",)):
+        """batch: {tokens:[B,S], labels:[B,S], (pos_ids:[B,S,3])}."""
+        x = self._embed(params, batch["tokens"], mesh, dp_axes)
+        x = self._forward(params, x, mesh, dp_axes, batch.get("pos_ids"))
+        loss = chunked_ce(self.cfg, lambda xc: self._head(params, xc, mesh, dp_axes),
+                          x, batch["labels"])
+        return loss, {"loss": loss}
+
+    def prefill(self, params, tokens, max_seq, mesh=None, dp_axes=("data",),
+                pos_ids=None):
+        """Returns (last-token logits [B,V], filled cache)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        cache = self.init_cache(b, max_seq)
+        x = self._embed(params, tokens, mesh, dp_axes)
+        for gi, (pattern, reps) in enumerate(cfg.layout):
+            gp = params[f"g{gi}"]
+            gc = cache[f"g{gi}"]
+
+            def body(carry, xs, _pattern=pattern):
+                h = constrain(carry, mesh, dp_axes, *residual_spec(cfg))
+                ps, cs = xs
+                new_cs = {}
+                for i, kind in enumerate(_pattern):
+                    key = f"s{i}_{kind}"
+                    h, new_cs[key] = block_prefill(
+                        cfg, kind, ps[key], h, cs[key],
+                        mesh=mesh, dp_axes=dp_axes, pos_ids=pos_ids)
+                return constrain(h, mesh, dp_axes, *residual_spec(cfg)), new_cs
+
+            x, cache[f"g{gi}"] = jax.lax.scan(_remat(cfg, body), x, (gp, gc))
+        logits = self._head(params, x[:, -1:], mesh, dp_axes)[:, 0]
+        return logits, cache
+
+    def decode(self, params, cache, token, pos, mesh=None, dp_axes=("data",),
+               pos_ids=None):
+        """One decode step. token: [B,1]; pos: scalar int32 (# tokens so far).
+        Returns (logits [B,V], new cache)."""
+        cfg = self.cfg
+        x = self._embed(params, token, mesh, dp_axes)
+        new_cache = {}
+        for gi, (pattern, reps) in enumerate(cfg.layout):
+            gp = params[f"g{gi}"]
+            gc = cache[f"g{gi}"]
+
+            def body(carry, xs, _pattern=pattern):
+                h = carry
+                ps, cs = xs
+                new_cs = {}
+                for i, kind in enumerate(_pattern):
+                    key = f"s{i}_{kind}"
+                    h, new_cs[key] = block_decode(
+                        cfg, kind, ps[key], h, cs[key], pos,
+                        mesh=mesh, dp_axes=dp_axes, pos_ids=pos_ids)
+                return h, new_cs
+
+            x, new_cache[f"g{gi}"] = jax.lax.scan(body, x, (gp, gc))
+        logits = self._head(params, x, mesh, dp_axes)[:, 0]
+        return logits, new_cache

@@ -1,0 +1,93 @@
+"""RG-LRU recurrent block (recurrentgemma-2b).
+
+Same chunked diagonal-linear-recurrence treatment as the Mamba block (see
+ssm.py) — the recurrence is sequential and sits outside the paper's
+group-by machinery.  Gate projections are dense [w,w] (the reference model
+uses block-diagonal heads; dense is a superset — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, dense
+from .ssm import _assoc, _causal_conv
+
+_C = 8.0  # RG-LRU exponent scale
+
+
+def rglru_defs(cfg) -> dict[str, ParamDef]:
+    d, w, k = cfg.d_model, cfg.lru_width, cfg.ssm_conv
+    dt = cfg.param_dtype
+    return {
+        "in_x": ParamDef((d, w), ("embed", "lru"), dt),
+        "in_y": ParamDef((d, w), ("embed", "lru"), dt),
+        "conv_w": ParamDef((k, w), ("conv", "lru"), dt),
+        "conv_b": ParamDef((w,), ("lru",), dt, init="zeros"),
+        "gate_a": ParamDef((w, w), ("lru", "none"), dt),
+        "gate_x": ParamDef((w, w), ("lru", "none"), dt),
+        "lam": ParamDef((w,), ("lru",), jnp.float32, init="ones"),
+        "out": ParamDef((w, d), ("lru", "embed"), dt),
+    }
+
+
+def rglru_cache_defs(cfg, batch: int):
+    w, k = cfg.lru_width, cfg.ssm_conv
+    return {"conv": jax.ShapeDtypeStruct((batch, k - 1, w), cfg.cache_dtype),
+            "h": jax.ShapeDtypeStruct((batch, w), jnp.float32)}
+
+
+def _gates(p, xc):
+    """a_t (decay) and gated input for xc: [B, C, w] (fp32 math)."""
+    x32 = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(x32, p["gate_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(dense(x32, p["gate_x"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r              # [B,C,w]
+    a = jnp.exp(log_a)
+    gated = i * x32
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * gated
+    return a, b
+
+
+def rglru_forward(cfg, p, x, *, h0=None, conv0=None, return_state=False):
+    """x: [B,S,d] -> [B,S,d]."""
+    b, s, _ = x.shape
+    w = cfg.lru_width
+    xb = dense(x, p["in_x"])
+    yg = jax.nn.gelu(dense(x, p["in_y"]))
+    xc, conv_tail = _causal_conv(xb, p["conv_w"], p["conv_b"], conv0)
+
+    chunk = min(cfg.scan_chunk, s)
+    if s % chunk != 0:
+        chunk = s  # fallback: single chunk for odd lengths
+    nc = s // chunk
+    xcs = xc.reshape(b, nc, chunk, w).transpose(1, 0, 2, 3)
+    h_init = jnp.zeros((b, w), jnp.float32) if h0 is None else h0
+
+    @jax.checkpoint
+    def chunk_fn(h, xc_c):
+        a, bb = _gates(p, xc_c)
+        a_cum, b_cum = jax.lax.associative_scan(_assoc, (a, bb), axis=1)
+        h_all = a_cum * h[:, None] + b_cum                    # [B,C,w]
+        return h_all[:, -1], h_all
+
+    h_last, hs = jax.lax.scan(chunk_fn, h_init, xcs)
+    h_seq = hs.transpose(1, 0, 2, 3).reshape(b, s, w)
+    out = dense((h_seq * yg.astype(jnp.float32)).astype(x.dtype), p["out"])
+    if return_state:
+        return out, {"conv": conv_tail.astype(cfg.cache_dtype), "h": h_last}
+    return out
+
+
+def rglru_decode(cfg, p, x, cache):
+    """x: [B,1,d]."""
+    k = cfg.ssm_conv
+    xb = dense(x, p["in_x"])
+    yg = jax.nn.gelu(dense(x, p["in_y"]))
+    window = jnp.concatenate([cache["conv"].astype(xb.dtype), xb], axis=1)
+    xc = sum(window[:, i] * p["conv_w"][i].astype(xb.dtype) for i in range(k))
+    xc = (xc + p["conv_b"].astype(xb.dtype))[:, None]         # [B,1,w]
+    a, bb = _gates(p, xc)
+    h = a[:, 0] * cache["h"] + bb[:, 0]                       # [B,w]
+    out = dense((h[:, None] * yg.astype(jnp.float32)).astype(x.dtype), p["out"])
+    return out, {"conv": window[:, 1:].astype(cfg.cache_dtype), "h": h}

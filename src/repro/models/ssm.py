@@ -1,0 +1,122 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+The selective scan is a *sequential loop-carried recurrence* — exactly the
+class of loops the paper's framework rejects as non-parallelizable over the
+group-by path (DESIGN.md §5).  We implement it TPU-natively as a chunked
+diagonal linear recurrence: an outer `lax.scan` over sequence chunks (O(1)
+state carry) with an inner `associative_scan` (log-depth) per chunk, so the
+[B, S, d_inner, N] discretized tensors only ever materialize one chunk at a
+time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, dense
+
+
+def ssm_defs(cfg) -> dict[str, ParamDef]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, k = cfg.ssm_dt_rank, cfg.ssm_conv
+    dt = cfg.param_dtype
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("embed", "dinner"), dt),
+        "conv_w": ParamDef((k, di), ("conv", "dinner"), dt),
+        "conv_b": ParamDef((di,), ("dinner",), dt, init="zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * n), ("dinner", "none"), dt),
+        "dt_proj": ParamDef((dtr, di), ("dtrank", "dinner"), dt),
+        "dt_bias": ParamDef((di,), ("dinner",), jnp.float32, init="ssm_dt"),
+        "a_log": ParamDef((di, n), ("dinner", "state"), jnp.float32, init="ssm_a"),
+        "d_skip": ParamDef((di,), ("dinner",), jnp.float32, init="ones"),
+        "out_proj": ParamDef((di, d), ("dinner", "embed"), dt),
+    }
+
+
+def ssm_cache_defs(cfg, batch: int):
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {"conv": jax.ShapeDtypeStruct((batch, k - 1, di), cfg.cache_dtype),
+            "h": jax.ShapeDtypeStruct((batch, di, n), jnp.float32)}
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv over seq. x: [B,S,di]; w: [k,di]."""
+    k = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    return out + b.astype(x.dtype), xp[:, -(k - 1):] if k > 1 else pad
+
+
+def _assoc(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _ssm_params(cfg, p, x):
+    """Per-step SSM tensors from conv'd activations x: [B, C, di]."""
+    n, dtr = cfg.ssm_state, cfg.ssm_dt_rank
+    proj = dense(x, p["x_proj"]).astype(jnp.float32)
+    dt_r, bt, ct = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dense(dt_r, p["dt_proj"].astype(jnp.float32)) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                                  # [di, N]
+    da = jnp.exp(dt[..., None] * a)                           # [B,C,di,N]
+    db_x = (dt * x.astype(jnp.float32))[..., None] * bt[..., None, :]
+    return da, db_x, ct
+
+
+def mamba_forward(cfg, p, x, *, h0=None, conv0=None, return_state=False):
+    """x: [B,S,d] -> [B,S,d].  Chunked selective scan."""
+    b, s, _ = x.shape
+    di = cfg.d_inner
+    xz = dense(x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_tail = _causal_conv(xin, p["conv_w"], p["conv_b"], conv0)
+    xc = jax.nn.silu(xc)
+
+    chunk = min(cfg.scan_chunk, s)
+    if s % chunk != 0:
+        chunk = s  # fallback: single chunk for odd lengths
+    nc = s // chunk
+    xcs = xc.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)   # [nc,B,C,di]
+    h_init = jnp.zeros((b, di, cfg.ssm_state), jnp.float32) if h0 is None else h0
+
+    @jax.checkpoint
+    def chunk_fn(h, xc_c):
+        # rematted: backward recomputes the [B,C,di,N] discretized tensors
+        # per chunk instead of saving them for the whole sequence
+        da, db, ct = _ssm_params(cfg, p, xc_c)
+        a_cum, b_cum = jax.lax.associative_scan(_assoc, (da, db), axis=1)
+        h_all = a_cum * h[:, None] + b_cum                     # [B,C,di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, ct)
+        return h_all[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_fn, h_init, xcs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(y, p["out_proj"])
+    if return_state:
+        return out, {"conv": conv_tail.astype(cfg.cache_dtype), "h": h_last}
+    return out
+
+
+def mamba_decode(cfg, p, x, cache):
+    """One-step decode. x: [B,1,d]; cache: {conv:[B,k-1,di], h:[B,di,N]}."""
+    xz = dense(x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)                         # [B,1,di]
+    k = cfg.ssm_conv
+    window = jnp.concatenate([cache["conv"].astype(xin.dtype), xin], axis=1)  # [B,k,di]
+    xc = sum(window[:, i] * p["conv_w"][i].astype(xin.dtype) for i in range(k))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(xin.dtype))[:, None]  # [B,1,di]
+    da, db, ct = _ssm_params(cfg, p, xc)
+    h = da[:, 0] * cache["h"] + db[:, 0]                       # [B,di,N]
+    y = jnp.einsum("bdn,bn->bd", h, ct[:, 0])
+    y = y + xc[:, 0].astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None].astype(x.dtype)
+    out = dense(y, p["out_proj"])
+    return out, {"conv": window[:, 1:].astype(cfg.cache_dtype), "h": h}

@@ -1,0 +1,210 @@
+"""Whisper-style encoder-decoder backbone (whisper-tiny).
+
+Per the assignment the modality frontend is a STUB: the encoder consumes
+precomputed frame embeddings [B, enc_seq, d] from input_specs() (no mel
+conv stack).  Sinusoidal positions on both sides (adaptation noted in the
+config docstring).  Decoder layers: causal self-attn -> cross-attn -> MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn
+from .common import ParamDef, constrain, dense, is_def, rms_norm, \
+    tree_abstract, tree_init, tree_pspecs
+
+
+def _sinusoid(seq: int, d: int, offset=0):
+    pos = offset + jnp.arange(seq)[:, None].astype(jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, d, 2) / d)
+    ang = pos * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _norm_def(cfg):
+    return ParamDef((cfg.d_model,), ("embed",), jnp.float32, init="zeros")
+
+
+def _mlp_defs(cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = cfg.param_dtype
+    return {"w_in": ParamDef((d, ff), ("embed", "ff"), dt),
+            "b_in": ParamDef((ff,), ("ff",), dt, init="zeros"),
+            "w_out": ParamDef((ff, d), ("ff", "embed"), dt),
+            "b_out": ParamDef((d,), ("embed",), dt, init="zeros")}
+
+
+def _enc_layer_defs(cfg):
+    return {"ln1": _norm_def(cfg), "attn": attn.attn_defs(cfg),
+            "ln2": _norm_def(cfg), "mlp": _mlp_defs(cfg)}
+
+
+def _dec_layer_defs(cfg):
+    return {"ln1": _norm_def(cfg), "self": attn.attn_defs(cfg),
+            "ln2": _norm_def(cfg), "cross": attn.attn_defs(cfg),
+            "ln3": _norm_def(cfg), "mlp": _mlp_defs(cfg)}
+
+
+def _mlp(cfg, p, x):
+    return dense(jax.nn.gelu(dense(x, p["w_in"], p["b_in"])), p["w_out"], p["b_out"])
+
+
+def _stack(defs, reps):
+    return jax.tree.map(lambda d: ParamDef((reps,) + d.shape,
+                                           ("layers",) + d.logical, d.dtype, d.init),
+                        defs, is_leaf=is_def)
+
+
+class Whisper:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.pos_embed == "sinusoidal"
+        self.dec_layers = sum(len(p) * r for p, r in cfg.layout)
+
+    def defs(self):
+        cfg = self.cfg
+        return {
+            "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              cfg.param_dtype, init="normal"),
+            "enc": _stack(_enc_layer_defs(cfg), cfg.enc_layers),
+            "dec": _stack(_dec_layer_defs(cfg), self.dec_layers),
+            "enc_norm": _norm_def(cfg),
+            "final_norm": _norm_def(cfg),
+            "lm_head": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                cfg.param_dtype),
+        }
+
+    def abstract_params(self):
+        return tree_abstract(self.defs())
+
+    def pspecs(self, axis_sizes):
+        return tree_pspecs(self.defs(), axis_sizes)
+
+    def init(self, seed: int = 0):
+        return tree_init(self.defs(), seed)
+
+    # -------------- encoder --------------
+    def encode(self, params, frames, mesh=None, dp_axes=("data",)):
+        """frames: [B, S_enc, d] (stub embeddings)."""
+        cfg = self.cfg
+        x = frames.astype(cfg.compute_dtype)
+        x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        x = constrain(x, mesh, dp_axes, None, None)
+
+        def body(h, p):
+            h = h + attn.attn_forward(cfg, p["attn"], rms_norm(h, p["ln1"]),
+                                      causal=False, mesh=mesh, dp=dp_axes)
+            h = h + _mlp(cfg, p["mlp"], rms_norm(h, p["ln2"]))
+            return h, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"])
+        return rms_norm(x, params["enc_norm"])
+
+    # -------------- decoder --------------
+    def _dec_embed(self, params, tokens, offset=0):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+        return x + _sinusoid(tokens.shape[1], cfg.d_model, offset).astype(x.dtype)[None]
+
+    def _head(self, params, x, mesh=None, dp_axes=("data",)):
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("...d,dv->...v", x, params["lm_head"]).astype(jnp.float32)
+        return constrain(logits, mesh, dp_axes, None, "model")
+
+    def loss(self, params, batch, mesh=None, dp_axes=("data",)):
+        """batch: {frames:[B,Se,d], tokens:[B,S], labels:[B,S]}."""
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"], mesh, dp_axes)
+        x = self._dec_embed(params, batch["tokens"])
+        x = constrain(x, mesh, dp_axes, None, None)
+
+        def body(h, p):
+            h = h + attn.attn_forward(cfg, p["self"], rms_norm(h, p["ln1"]),
+                                      causal=True, mesh=mesh, dp=dp_axes)
+            kv = attn.cross_kv(cfg, p["cross"], enc)
+            h = h + attn.cross_attn_forward(cfg, p["cross"], rms_norm(h, p["ln2"]),
+                                            kv, mesh, dp_axes)
+            h = h + _mlp(cfg, p["mlp"], rms_norm(h, p["ln3"]))
+            return h, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec"])
+        from .lm import chunked_ce
+        loss = chunked_ce(cfg, lambda xc: self._head(params, xc, mesh, dp_axes),
+                          x, batch["labels"])
+        return loss, {"loss": loss}
+
+    # -------------- serving --------------
+    def cache_defs(self, batch, max_seq):
+        cfg = self.cfg
+        self_kv = attn.attn_cache_defs(cfg, batch, max_seq)
+        cross_shape = (self.dec_layers, batch, cfg.enc_seq, cfg.num_kv_heads,
+                       cfg.head_dim)
+        return {
+            "self": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((self.dec_layers,) + s.shape, s.dtype),
+                self_kv),
+            "cross_k": jax.ShapeDtypeStruct(cross_shape, cfg.cache_dtype),
+            "cross_v": jax.ShapeDtypeStruct(cross_shape, cfg.cache_dtype),
+        }
+
+    def init_cache(self, batch, max_seq):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_defs(batch, max_seq))
+
+    def cache_pspecs(self, cache_tree, axis_sizes, dp_axes=("data",)):
+        model_n = axis_sizes.get("model", 1)
+
+        def spec(leaf):
+            seq_ok = model_n > 1 and leaf.shape[2] % model_n == 0
+            return P(None, dp_axes, "model" if seq_ok else None, None, None)
+        return jax.tree.map(spec, cache_tree)
+
+    def prefill(self, params, frames, tokens, max_seq, mesh=None,
+                dp_axes=("data",), pos_ids=None):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        enc = self.encode(params, frames, mesh, dp_axes)
+        cache = self.init_cache(b, max_seq)
+        x = self._dec_embed(params, tokens)
+
+        def body(h, xs):
+            p, sc = xs
+            y, new_sc = attn.attn_prefill(cfg, p["self"], rms_norm(h, p["ln1"]),
+                                          sc, mesh=mesh, dp=dp_axes)
+            h = h + y
+            kv = attn.cross_kv(cfg, p["cross"], enc)
+            h = h + attn.cross_attn_forward(cfg, p["cross"], rms_norm(h, p["ln2"]),
+                                            kv, mesh, dp_axes)
+            h = h + _mlp(cfg, p["mlp"], rms_norm(h, p["ln3"]))
+            return h, (new_sc, kv[0].astype(cfg.cache_dtype),
+                       kv[1].astype(cfg.cache_dtype))
+
+        x, (self_c, ck, cv) = jax.lax.scan(jax.checkpoint(body), x,
+                                           (params["dec"], cache["self"]))
+        logits = self._head(params, x[:, -1:], mesh, dp_axes)[:, 0]
+        return logits, {"self": self_c, "cross_k": ck, "cross_v": cv}
+
+    def decode(self, params, cache, token, pos, mesh=None, dp_axes=("data",),
+               pos_ids=None):
+        cfg = self.cfg
+        x = self._dec_embed(params, token, offset=pos)
+
+        def body(h, xs):
+            p, sc, ck, cv = xs
+            y, new_sc = attn.attn_decode(cfg, p["self"], rms_norm(h, p["ln1"]),
+                                         sc, pos, mesh=mesh, dp=dp_axes)
+            h = h + y
+            h = h + attn.cross_attn_forward(
+                cfg, p["cross"], rms_norm(h, p["ln2"]),
+                (ck.astype(cfg.compute_dtype), cv.astype(cfg.compute_dtype)),
+                mesh, dp_axes)
+            h = h + _mlp(cfg, p["mlp"], rms_norm(h, p["ln3"]))
+            return h, new_sc
+
+        x, self_c = jax.lax.scan(body, x, (params["dec"], cache["self"],
+                                           cache["cross_k"], cache["cross_v"]))
+        logits = self._head(params, x, mesh, dp_axes)[:, 0]
+        return logits, {"self": self_c, "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"]}

@@ -1,0 +1,67 @@
+"""AdamW with fp32 moments, global-norm clipping, cosine schedule.
+
+Moments are stored fp32 regardless of param dtype (bf16 training).  An
+optional gradient-compression hook (bf16 cast pre-all-reduce) is applied by
+the train step, not here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array           # scalar int32
+    mu: object                # pytree like params, fp32
+    nu: object                # pytree like params, fp32
+
+
+def adamw_init(params, dtype=jnp.float32) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(z, params), jax.tree.map(z, params))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, max_norm=1.0):
+    """Returns (new_params, new_state, metrics). grads may be bf16; math fp32."""
+    grads, gnorm = clip_by_global_norm(grads, max_norm)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+    b1t = 1.0 - b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        mdt = m.dtype  # bf16 moments supported (cfg.opt_dtype)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m32 / b1t
+        vh = v32 / b2t
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr_t}

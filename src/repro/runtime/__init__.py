@@ -1,0 +1,3 @@
+from .ft import TrainRunner
+
+__all__ = ["TrainRunner"]

@@ -1,0 +1,27 @@
+"""Serving steps: prefill (builds the cache) and decode (one new token with
+a KV/state cache of `max_seq`)."""
+from __future__ import annotations
+
+from ..models import get_model
+
+
+def make_prefill_step(cfg, max_seq, mesh=None, dp_axes=("data",)):
+    model = get_model(cfg)
+
+    if cfg.family == "audio":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["frames"], batch["tokens"],
+                                 max_seq, mesh, dp_axes)
+    else:
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"], max_seq, mesh,
+                                 dp_axes, pos_ids=batch.get("pos_ids"))
+    return prefill_step
+
+
+def make_decode_step(cfg, mesh=None, dp_axes=("data",)):
+    model = get_model(cfg)
+
+    def decode_step(params, cache, token, pos):
+        return model.decode(params, cache, token, pos, mesh, dp_axes)
+    return decode_step

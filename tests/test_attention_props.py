@@ -1,0 +1,77 @@
+"""Property tests for the attention building blocks."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.launch import hlo_analysis
+from repro.models.attention import _scores_mask, attention_core
+from repro.models.common import apply_rope
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 16), st.integers(0, 8))
+def test_window_mask_matches_definition(sq, sk, window):
+    qp = jnp.arange(sq)
+    kp = jnp.arange(sk)
+    m = np.asarray(_scores_mask(qp, kp, causal=True, window=window))
+    for i in range(sq):
+        for j in range(sk):
+            want = j <= i and (window == 0 or j > i - window)
+            assert m[i, j] == want, (i, j, window)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+def test_rope_preserves_norm_and_relative_phase(seed, pos0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 4, 2, 16)), jnp.float32)
+    pos = pos0 + jnp.arange(4)
+    y = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+    # relative property: <q_i, k_j> depends only on i-j
+    q = jnp.asarray(rng.standard_normal((1, 8, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 8, 1, 16)), jnp.float32)
+    q1, k1 = apply_rope(q, jnp.arange(8), 1e4), apply_rope(k, jnp.arange(8), 1e4)
+    q2, k2 = apply_rope(q, 5 + jnp.arange(8), 1e4), apply_rope(k, 5 + jnp.arange(8), 1e4)
+    s1 = np.einsum("bqhd,bkhd->bqk", np.asarray(q1), np.asarray(k1))
+    s2 = np.einsum("bqhd,bkhd->bqk", np.asarray(q2), np.asarray(k2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-3)
+
+
+def test_chunked_attention_equals_direct():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 64, 2, 16)), jnp.float32)
+    direct = attention_core(q, k, v, causal=True, chunk_q=64)
+    chunked = attention_core(q, k, v, causal=True, chunk_q=16)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(chunked),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_local_window_chunked_subquadratic_path():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 128, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 8)), jnp.float32)
+    full = attention_core(q, k, v, causal=True, window=16, chunk_q=128)
+    # window+chunk < sk triggers the kv-sliced (subquadratic) branch
+    sliced = attention_core(q, k, v, causal=True, window=16, chunk_q=32)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(sliced),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_upcast_artifact_detector():
+    hlo = """
+HloModule m
+
+ENTRY %main (p: bf16[4,8]) -> f32[] {
+  %w = (s32[], bf16[4,8], f32[4,8], f32[2,2]) while(%t), condition=%c, body=%b
+  ROOT %r = f32[] constant(0)
+}
+"""
+    stats = hlo_analysis.parse_computations(hlo)
+    art = hlo_analysis._upcast_artifact(stats)
+    assert art == 4 * 8 * 4  # the f32[4,8] twin of bf16[4,8]; f32[2,2] not

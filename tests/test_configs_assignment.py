@@ -1,0 +1,67 @@
+"""Pin every architecture config to the assignment table (guards typos:
+these numbers are the graded spec, not tunables)."""
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.cells import all_cells
+
+SPEC = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+    "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 0, 151936),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+}
+
+
+def test_all_ten_archs_registered():
+    assert sorted(SPEC) == list_archs()
+
+
+@pytest.mark.parametrize("name", sorted(SPEC))
+def test_config_matches_assignment(name):
+    cfg = get_config(name)
+    layers, d, h, kv, ff, v = SPEC[name]
+    assert cfg.num_layers == layers
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_moe_specs():
+    q = get_config("qwen3-moe-30b-a3b")
+    assert (q.num_experts, q.top_k, q.moe_d_ff) == (128, 8, 768)
+    a = get_config("arctic-480b")
+    assert (a.num_experts, a.top_k, a.dense_residual) == (128, 2, True)
+
+
+def test_ssm_spec():
+    m = get_config("falcon-mamba-7b")
+    assert m.ssm_state == 16 and m.family == "ssm"
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_cell_enumeration_40_with_8_skips():
+    cells = all_cells()
+    assert len(cells) == 40
+    skipped = [c for c in cells if c[2] is not None]
+    assert len(skipped) == 8  # long_500k for the 8 quadratic-attn archs
+    assert all(s == "long_500k" for _, s, r in skipped)
+    runnable_long = [a for a, s, r in cells if s == "long_500k" and r is None]
+    assert sorted(runnable_long) == ["falcon-mamba-7b", "recurrentgemma-2b"]

@@ -1,0 +1,60 @@
+"""Distributed (shard_map + gspmd) execution of compiled loop programs
+equals single-device execution — run in a subprocess with 8 forced host
+devices (the main test process must keep 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np
+from repro.core import compile_program
+from repro.core.distributed import compile_distributed
+from repro.core.programs import ALL
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((8,), ("data",))
+rng = np.random.default_rng(7)
+nv = 16
+cases = {
+  "word_count": dict(W=rng.integers(0, nv, 64).astype(np.float64), C=np.zeros(nv)),
+  "group_by": dict(S=(rng.integers(0, nv, 64).astype(np.float64),
+                      rng.standard_normal(64)), C=np.zeros(nv)),
+  "histogram": dict(P=tuple(rng.integers(0, nv, 64).astype(np.float64)
+                            for _ in range(3)),
+                    R=np.zeros(nv), G=np.zeros(nv), B=np.zeros(nv)),
+  "conditional_sum": dict(V=rng.standard_normal(64), s=0.0, limit=0.3),
+  "pagerank": dict(E=(rng.integers(0, 12, 64).astype(np.float64),
+                      rng.integers(0, 12, 64).astype(np.float64)),
+                   P=np.full(12, 1/12), NP=np.zeros(12), C=np.zeros(12),
+                   N=12, num_steps=2.0, steps=0.0, b=0.85),
+  "matrix_multiplication": dict(M=rng.standard_normal((16, 8)),
+                                N=rng.standard_normal((8, 12)),
+                                R=np.zeros((16, 12)), n=16, m=12, l=8),
+}
+for name, ins in cases.items():
+    fn = ALL[name]
+    single = compile_program(fn).run(ins)
+    for mode in ("shardmap", "gspmd"):
+        dist = compile_distributed(fn, mesh, ("data",), mode=mode).run(ins)
+        for k in single:
+            a = np.asarray(dist[k], np.float64)
+            b = np.asarray(single[k], np.float64)
+            err = np.max(np.abs(a - b) / (np.abs(b) + 1.0))
+            assert err < 1e-4, (name, mode, k, err)
+print("DIST_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_equals_single_device():
+    r = subprocess.run([sys.executable, "-c", _CODE], capture_output=True,
+                       text=True, cwd=_ROOT, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "DIST_OK" in r.stdout

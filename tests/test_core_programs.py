@@ -1,0 +1,121 @@
+"""Meaning preservation (paper Theorem A.1, validated empirically): every
+benchmark program compiled to bulk JAX equals the sequential interpreter."""
+import numpy as np
+import pytest
+
+from repro.core import compile_program, interpret
+from repro.core.programs import ALL
+
+rng = np.random.default_rng(42)
+
+
+def data_for(name):
+    n, m, l, K, nv = 8, 6, 5, 4, 10
+    if name == "average":
+        return dict(V=rng.standard_normal(20), s=0.0, cnt=0.0, avg=0.0)
+    if name == "count":
+        return dict(V=rng.standard_normal(20), cnt=0.0)
+    if name == "conditional_count":
+        return dict(V=rng.standard_normal(20), cnt=0.0, limit=0.3)
+    if name == "conditional_sum":
+        return dict(V=rng.standard_normal(20), s=0.0, limit=0.3)
+    if name == "equal":
+        w = rng.integers(0, 3, 25).astype(np.float64)
+        return dict(W=w, first=float(w[0]), diffs=0.0)
+    if name == "string_match":
+        return dict(W=rng.integers(0, 9, 30).astype(np.float64),
+                    k1=1.0, k2=5.0, k3=11.0, found=np.zeros(3))
+    if name == "word_count":
+        return dict(W=rng.integers(0, nv, 50).astype(np.float64),
+                    C=np.zeros(nv))
+    if name == "histogram":
+        return dict(P=tuple(rng.integers(0, nv, 40).astype(np.float64)
+                            for _ in range(3)),
+                    R=np.zeros(nv), G=np.zeros(nv), B=np.zeros(nv))
+    if name == "group_by":
+        return dict(S=(rng.integers(0, nv, 40).astype(np.float64),
+                       rng.standard_normal(40)), C=np.zeros(nv))
+    if name == "linear_regression":
+        x = rng.standard_normal(30)
+        y = 2 * x + 1 + 0.1 * rng.standard_normal(30)
+        return dict(P=(x, y), n=30, sum_x=0.0, sum_y=0.0, x_bar=0.0,
+                    y_bar=0.0, xx_bar=0.0, xy_bar=0.0, slope=0.0,
+                    intercept=0.0)
+    if name == "matrix_addition":
+        return dict(M=rng.standard_normal((n, m)),
+                    N=rng.standard_normal((n, m)), R=np.zeros((n, m)),
+                    n=n, m=m)
+    if name == "matrix_multiplication":
+        return dict(M=rng.standard_normal((n, l)),
+                    N=rng.standard_normal((l, m)), R=np.zeros((n, m)),
+                    n=n, m=m, l=l)
+    if name == "pagerank":
+        ne, N = 30, 10
+        return dict(E=(rng.integers(0, N, ne).astype(np.float64),
+                       rng.integers(0, N, ne).astype(np.float64)),
+                    P=np.full(N, 1.0 / N), NP=np.zeros(N), C=np.zeros(N),
+                    N=N, num_steps=3.0, steps=0.0, b=0.85)
+    if name == "kmeans_step":
+        npts = 20
+        return dict(P=(rng.standard_normal(npts) * 3,
+                       rng.standard_normal(npts) * 3),
+                    CX=rng.standard_normal(K), CY=rng.standard_normal(K),
+                    K=K, D=np.zeros((npts, K)), MinD=np.full(npts, 1e30),
+                    Cl=np.zeros(npts), SX=np.zeros(K), SY=np.zeros(K),
+                    CN=np.zeros(K), NX=np.zeros(K), NY=np.zeros(K))
+    if name == "matrix_factorization_step":
+        return dict(R=rng.standard_normal((n, m)),
+                    P=rng.standard_normal((n, l)) * 0.1,
+                    Q=rng.standard_normal((l, m)) * 0.1,
+                    Pp=rng.standard_normal((n, l)) * 0.1,
+                    Qp=rng.standard_normal((l, m)) * 0.1,
+                    pq=np.zeros((n, m)), err=np.zeros((n, m)),
+                    n=n, m=m, l=l, a=0.002, lam=0.02)
+    raise KeyError(name)
+
+
+def _np64(ins):
+    return {k: (np.array(v, dtype=np.float64) if isinstance(v, np.ndarray)
+                else v) for k, v in ins.items()}
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_compiled_equals_interpreter(name):
+    fn = ALL[name]
+    ins = data_for(name)
+    out = compile_program(fn).run(ins)
+    ref = interpret(fn.program, _np64(ins))
+    for k in out:
+        a = np.asarray(out[k], np.float64)
+        b = np.asarray(ref[k], np.float64)
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=1e-4, err_msg=k)
+
+
+@pytest.mark.parametrize("name", ["matrix_multiplication",
+                                  "matrix_factorization_step"])
+def test_paper_faithful_no_einsum_path(name):
+    """optimize_contractions=False = the paper-faithful gather+reduce plan."""
+    fn = ALL[name]
+    ins = data_for(name)
+    a = compile_program(fn, optimize_contractions=True).run(ins)
+    b = compile_program(fn, optimize_contractions=False).run(ins)
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=2e-3, atol=1e-4)
+
+
+def test_jit_compatible():
+    import jax
+    import jax.numpy as jnp
+    fn = ALL["word_count"]
+    cp = compile_program(fn)
+
+    @jax.jit
+    def run(w):
+        return cp.run(dict(W=(w,), C=jnp.zeros(10)))["C"]
+
+    w = jnp.asarray(rng.integers(0, 10, 64), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(run(w)),
+        np.asarray(cp.run(dict(W=(np.asarray(w),), C=np.zeros(10)))["C"]),
+        rtol=1e-6)

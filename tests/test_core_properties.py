@@ -1,0 +1,110 @@
+"""Property-based validation of Theorem A.1 (meaning preservation): random
+loop programs drawn from a restriction-respecting grammar must compile to
+bulk JAX programs that agree with the sequential interpreter."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RejectionError, compile_program, interpret
+from repro.core.loop_ast import (Assign, BinOp, Call, Const, DIndex, ForRange,
+                                 If, IncUpdate, Index, Program, TypeInfo,
+                                 UnOp, Var)
+
+N = 5  # vector length for all generated programs
+
+
+def vec(name):
+    return name, TypeInfo("vector", ("n",))
+
+
+# --- expression strategies (over loop var i, arrays A/B/W, consts) ---
+
+def exprs(depth=2):
+    leaf = st.one_of(
+        st.sampled_from([Var("i")]),
+        st.floats(-2, 2, allow_nan=False).map(lambda c: Const(round(c, 3))),
+        st.tuples(st.sampled_from(["A", "B"]), st.integers(-1, 1)).map(
+            lambda t: Index(t[0], (BinOp("+", Var("i"), Const(t[1])),))),
+    )
+    if depth == 0:
+        return leaf
+    return st.one_of(
+        leaf,
+        st.tuples(st.sampled_from(["+", "-", "*"]), exprs(depth - 1),
+                  exprs(depth - 1)).map(lambda t: BinOp(*t)),
+        exprs(depth - 1).map(lambda e: Call("abs", (e,))),
+    )
+
+
+def key_expr():
+    # affine keys i+c, or indirect int(W[i]) keys (the paper's flagship case)
+    return st.one_of(
+        st.integers(-1, 1).map(lambda c: BinOp("+", Var("i"), Const(c))),
+        st.just(Call("int", (Index("W", (Var("i"),)),))),
+    )
+
+
+def inc_stmt():
+    return st.tuples(st.sampled_from(["+", "max", "min"]), key_expr(),
+                     exprs()).map(
+        lambda t: IncUpdate(DIndex("C", (t[1],)), t[0], t[2]))
+
+
+def store_stmt():
+    # affine destination covering the loop index
+    return st.tuples(st.integers(0, 1), exprs()).map(
+        lambda t: Assign(DIndex("D", (BinOp("+", Var("i"), Const(t[0])),)),
+                         t[1]))
+
+
+def cond_stmt(inner):
+    return st.tuples(exprs(1), inner).map(
+        lambda t: If(BinOp("<", t[0], Const(0.5)), [t[1]], []))
+
+
+def loop_programs():
+    base = st.one_of(inc_stmt(), store_stmt())
+    stmt = st.one_of(base, cond_stmt(base))
+    return st.lists(stmt, min_size=1, max_size=3).map(
+        lambda body: Program(
+            "prop",
+            dict([vec("A"), vec("B"), vec("W"), vec("C"), vec("D"),
+                  ("n", TypeInfo("dim"))]),
+            [ForRange("i", Const(0), Var("n"), body)],
+            ("C", "D")))
+
+
+@settings(max_examples=60, deadline=None)
+@given(loop_programs(), st.integers(0, 2**31 - 1))
+def test_random_programs_meaning_preserving(prog, seed):
+    rng = np.random.default_rng(seed)
+    ins = dict(A=rng.standard_normal(N).round(3),
+               B=rng.standard_normal(N).round(3),
+               W=rng.integers(0, N, N).astype(np.float64),
+               C=rng.standard_normal(N).round(3),
+               D=rng.standard_normal(N).round(3), n=N)
+    try:
+        cp = compile_program(prog)
+    except RejectionError:
+        return  # a generated program may legitimately violate Def 3.1
+    out = cp.run(ins)
+    ref = interpret(prog, {k: (np.array(v, np.float64)
+                               if isinstance(v, np.ndarray) else v)
+                           for k, v in ins.items()})
+    for k in out:
+        np.testing.assert_allclose(np.asarray(out[k], np.float64),
+                                   np.asarray(ref[k], np.float64),
+                                   rtol=1e-3, atol=1e-4, err_msg=str(prog))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.floats(-2, 2,
+                                                       allow_nan=False)),
+                min_size=1, max_size=40))
+def test_groupby_invariant_sum_preserved(pairs):
+    """Group-by conservation law: total mass is invariant under grouping."""
+    from repro.core.programs import group_by
+    k = np.array([p[0] for p in pairs], np.float64)
+    v = np.array([round(p[1], 3) for p in pairs], np.float64)
+    out = compile_program(group_by).run(dict(S=(k, v), C=np.zeros(10)))
+    np.testing.assert_allclose(float(np.asarray(out["C"]).sum()),
+                               float(v.sum()), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,108 @@
+"""Translation-rule tests: the compiler reproduces the paper's derivations
+and rejects the paper's counterexamples with Def-3.1 diagnostics."""
+import numpy as np
+import pytest
+
+from repro.core import (RejectionError, compile_program, loop_program,
+                        matrix, vector, dim, scalar, parse_program)
+from repro.core.programs import matrix_multiplication, rejected_programs
+
+
+def test_matmul_target_matches_paper():
+    cp = compile_program(matrix_multiplication)
+    text = cp.pretty_target()
+    # the §1.1 derivation: zero-init store + join/group-by(+/) comprehension
+    assert "group by (i, j)" in text
+    assert "(M[i, k] * N[k, j])" in text
+    assert text.splitlines()[0].startswith("R := R ◁")
+
+
+@pytest.mark.parametrize("name,builder", rejected_programs())
+def test_paper_counterexamples_rejected(name, builder):
+    with pytest.raises(RejectionError):
+        compile_program(builder())
+
+
+def test_fixed_smoothing_accepted():
+    # paper §3.2: copying V to V' first satisfies the restrictions
+    @loop_program
+    def smoothing_fixed(V: vector, Vp: vector, n: dim):
+        for i in range(0, n):
+            Vp[i] = V[i]
+        for i in range(1, n - 1):
+            V[i] = (Vp[i - 1] + Vp[i + 1]) / 2.0
+    cp = compile_program(smoothing_fixed)
+    v = np.arange(8, dtype=np.float64)
+    out = cp.run(dict(V=v, Vp=np.zeros(8), n=8))
+    expect = v.copy()
+    expect[1:7] = (v[0:6] + v[2:8]) / 2
+    np.testing.assert_allclose(np.asarray(out["V"]), expect, rtol=1e-5)
+
+
+def test_fixed_scalar_as_vector_accepted():
+    # paper §3.2: n := V[i] fixed by making n a vector
+    @loop_program
+    def fixed(V: vector, N: vector, W: vector, n: dim):
+        for i in range(0, n):
+            N[i] = V[i]
+            W[i] = N[i] * 2.0
+    compile_program(fixed)
+
+
+def test_exception_b_matmul_like_read_of_aggregate():
+    # pq[i,j] += ...; err[i,j] := R[i,j]-pq[i,j]  is the paper's exception (b)
+    @loop_program
+    def mf_head(R: matrix, P: matrix, Q: matrix, pq: matrix, err: matrix,
+                n: dim, m: dim, l: dim):
+        for i in range(0, n):
+            for j in range(0, m):
+                pq[i, j] = 0.0
+                for k in range(0, l):
+                    pq[i, j] += P[i, k] * Q[k, j]
+                err[i, j] = R[i, j] - pq[i, j]
+    compile_program(mf_head)
+
+
+def test_exception_b_violation_rejected():
+    # reading the aggregate inside the k-loop violates exception (b)
+    with pytest.raises(RejectionError):
+        def bad(P: matrix, Q: matrix, pq: matrix, M: matrix,
+                n: dim, m: dim, l: dim):
+            for i in range(0, n):
+                for j in range(0, m):
+                    pq[i, j] = 0.0
+                    for k in range(0, l):
+                        pq[i, j] += P[i, k] * Q[k, j]
+                        M[i, k] = pq[i, j]
+        compile_program(parse_program(bad))
+
+
+def test_mixed_monoid_hardening():
+    with pytest.raises(RejectionError):
+        def bad(V: vector, W: vector, n: dim):
+            for i in range(0, n):
+                V[0] += W[i]
+                V[0] *= W[i]
+        compile_program(parse_program(bad))
+
+
+def test_incremental_with_indirect_key_accepted():
+    # the paper's flagship permissiveness: C[K[i]] += V[i]
+    @loop_program
+    def indirect(K: vector, V: vector, C: vector, n: dim):
+        for i in range(0, n):
+            C[int(K[i])] += V[i]
+    cp = compile_program(indirect)
+    k = np.array([1.0, 0.0, 1.0, 2.0])
+    v = np.array([10.0, 20.0, 30.0, 40.0])
+    out = cp.run(dict(K=k, V=v, C=np.zeros(3), n=4))
+    np.testing.assert_allclose(np.asarray(out["C"]), [20.0, 40.0, 40.0],
+                               rtol=1e-6)
+
+
+def test_scalar_write_in_loop_rejected():
+    with pytest.raises(RejectionError):
+        def bad(V: vector, t: scalar, n: dim):
+            for i in range(0, n):
+                t = V[i]
+        compile_program(parse_program(bad))
