@@ -10,11 +10,14 @@ Sections:
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
@@ -22,6 +25,9 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=1,
                     help="dataset scale multiplier for fig3")
     ap.add_argument("--sections", default="table1,fig3,sec5")
+    ap.add_argument("--json-out", default=os.path.join(
+        _REPO, "BENCH_programs.json"),
+        help="fig3 artifact path for the perf trajectory ('' disables)")
     args = ap.parse_args()
     sections = args.sections.split(",")
 
@@ -38,9 +44,19 @@ def main() -> None:
         from benchmarks import programs
         print("[fig3] generated vs hand-written (paper Figure 3)")
         print("name,generated_us,handwritten_us,ratio")
-        for name, tg, th, r in programs.rows(args.scale):
+        rows = programs.rows(args.scale)
+        for name, tg, th, r in rows:
             print(f"{name},{tg:.0f},{th:.0f},{r:.2f}")
         print()
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump({"section": "fig3", "scale": args.scale,
+                           "unit": "us_per_call",
+                           "rows": [{"name": n, "generated_us": round(tg, 1),
+                                     "handwritten_us": round(th, 1),
+                                     "ratio": round(r, 3)}
+                                    for n, tg, th, r in rows]}, f, indent=1)
+            print(f"[fig3] wrote {args.json_out}")
 
     if "sec5" in sections:
         from benchmarks import tiled

@@ -25,7 +25,8 @@ import numpy as np
 
 
 def _flatten(tree):
-    leaves = jax.tree.flatten_with_path(tree)[0]
+    from repro.compat import tree_flatten_with_path
+    leaves = tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in leaves:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -35,7 +36,8 @@ def _flatten(tree):
 
 
 def _unflatten_like(template, flat: dict):
-    leaves, treedef = jax.tree.flatten_with_path(template)
+    from repro.compat import tree_flatten_with_path
+    leaves, treedef = tree_flatten_with_path(template)
     vals = []
     for path, leaf in leaves:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

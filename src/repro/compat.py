@@ -1,0 +1,24 @@
+"""Version shims over the JAX public API surface we depend on.
+
+The repo targets the jax version baked into the container; a few symbols
+moved between releases:
+
+* ``jax.tree.flatten_with_path`` — only on newer jax; older releases spell
+  it ``jax.tree_util.tree_flatten_with_path``.
+* ``jax.shard_map`` — promoted out of ``jax.experimental.shard_map``.
+
+Import from here instead of feature-testing at every call site.
+"""
+from __future__ import annotations
+
+import jax
+import jax.tree_util as _tu
+
+tree_flatten_with_path = getattr(getattr(jax, "tree", None),
+                                "flatten_with_path",
+                                _tu.tree_flatten_with_path)
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401

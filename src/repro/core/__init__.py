@@ -3,18 +3,22 @@
 #
 # Pipeline: @loop_program (Python-source frontend, paper Fig. 1 language)
 #   → analysis.check (Def. 3.1 restrictions)
-#   → translate (Fig. 2 rules E/K/D/U/S + Rule 2 unnesting + Rules 16/17)
-#   → lower (gather / segment-⊕ / axis-reduce / einsum physical plans)
-#   → distributed (shard_map execution over a device mesh)
+#   → translate (Fig. 2 rules E/K/D/U/S + Rule 2 unnesting)
+#   → passes.plan_program (optimizer pipeline → physical-plan IR, plan.py:
+#     Rules 16/17, einsum recognition, §5 tiled fusion, DSE, update fusion)
+#   → lower.PlanExecutor (plan nodes → JAX, runtime guards + fallbacks)
+#   → distributed (shard_map / gspmd execution of the same plan over a mesh)
 from .analysis import check
 from .frontend import (bag, dim, intscalar, loop_program, map_, matrix,
                        parse_program, scalar, vector)
 from .interp import run as interpret
 from .loop_ast import Program, RejectionError
-from .lower import CompiledProgram, compile_program
+from .lower import CompiledProgram, PlanExecutor, compile_program
+from .passes import PlanConfig, plan_program
 from .translate import translate
 
 __all__ = ["loop_program", "parse_program", "compile_program", "interpret",
-           "check", "translate", "CompiledProgram", "Program",
+           "check", "translate", "CompiledProgram", "PlanExecutor",
+           "PlanConfig", "plan_program", "Program",
            "RejectionError", "vector", "matrix", "map_", "bag", "dim",
            "scalar", "intscalar"]

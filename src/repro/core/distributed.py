@@ -1,21 +1,29 @@
 """Distributed execution of compiled loop programs over a device mesh —
 the paper's DISC backend, retargeted from Spark shuffles to TPU collectives
-(DESIGN.md §2).
+(DESIGN.md §4).
 
-Two modes:
+Both modes consume the SAME physical plan (CompiledProgram.plan) through
+the public executor interface; bag offsets and logical bag lengths are plan
+parameters (lower.ExecContext), not lowerer state.
 
 * ``shardmap`` (paper-faithful operator mapping): bags are sharded over the
-  dp axes; every bulk aggregation whose iteration space is bag-driven runs
-  as  *local segment-⊕ partials → psum*  under `jax.shard_map` — the
-  reduction-based replacement for the paper's shuffle-based group-by.
-  Dense arrays are replicated (the paper's "broadcast small arrays to all
-  workers" future-work optimization, here the default: index spaces are
-  bounded).  Statements without bag generators execute replicated (identical
-  on all shards).
+  dp axes; every reduction node whose iteration space is bag-driven runs
+  as  *local partial-⊕ over the bag shard → psum*  under shard_map — the
+  reduction-based replacement for the paper's shuffle-based group-by.  A
+  `Fused` node (update-fusion pass) runs all its parts in ONE shard_map
+  round.  Dense arrays are replicated (the paper's "broadcast small arrays
+  to all workers" future-work optimization, here the default: index spaces
+  are bounded).  Nodes without bag axes execute replicated (identical on
+  all shards).
 
-* ``gspmd``: the single-device lowering jitted with sharded inputs; XLA's
-  SPMD partitioner inserts the collectives.  Works for every program,
-  including range-driven contractions (matmul → partitioned einsum).
+* ``gspmd``: the single-device plan executed on sharded inputs; XLA's SPMD
+  partitioner inserts the collectives.  Works for every program, including
+  range-driven contractions (matmul → partitioned einsum).
+
+Bags whose length is not divisible by the shard count are PADDED with zero
+rows to the next multiple; the original length travels as a bag limit and
+the executor masks the padding out of every aggregation, so odd-length
+bags shard instead of silently replicating.
 """
 from __future__ import annotations
 
@@ -23,13 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .comprehension import (BagGen, BulkStore, BulkUpdate, ScalarAgg,
-                            ScalarAssign, SeqWhile)
-from .lower import CompiledProgram, _identity, _COMBINE
-
-
-def _has_bag(quals) -> bool:
-    return any(isinstance(q, BagGen) for q in quals)
+from ..compat import shard_map
+from . import plan
+from .lower import COMBINE, CompiledProgram, ExecContext, identity
 
 
 class DistributedProgram:
@@ -44,17 +48,28 @@ class DistributedProgram:
             self.dp_n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
 
     # ------------------------- input placement -------------------------
-    def place(self, inputs: dict) -> dict:
+    def place(self, inputs: dict):
+        """Shard bags over dp, replicate dense arrays.  Bags whose length
+        is not divisible by the shard count are padded with zero rows;
+        returns (placed, bag_limits) where bag_limits maps each padded bag
+        to its logical length — consumers MUST mask rows beyond the limit
+        (DistributedProgram.run threads it through lower.ExecContext)."""
         out = {}
+        limits: dict[str, int] = {}
         for name, t in self.cp.program.params.items():
             v = inputs[name]
             if t.kind == "bag":
                 cols = v if isinstance(v, tuple) else (v,)
                 cols = tuple(jnp.asarray(c) for c in cols)
-                n = cols[0].shape[0]
-                spec = P(self.dp) if n % self.dp_n == 0 else P()
+                n = int(cols[0].shape[0])
+                pad = (-n) % self.dp_n
+                if pad:
+                    cols = tuple(jnp.concatenate(
+                        [c, jnp.zeros((pad,) + c.shape[1:], c.dtype)])
+                        for c in cols)
+                    limits[name] = n
                 out[name] = tuple(
-                    jax.device_put(c, NamedSharding(self.mesh, spec))
+                    jax.device_put(c, NamedSharding(self.mesh, P(self.dp)))
                     for c in cols)
             elif t.kind == "dim":
                 out[name] = int(v)
@@ -62,31 +77,46 @@ class DistributedProgram:
                 arr = jnp.asarray(v)
                 out[name] = jax.device_put(
                     arr, NamedSharding(self.mesh, P()))  # broadcast join
-        return out
+        return out, limits
 
     # ------------------------- shardmap mode -------------------------
-    def _exec_shardmap(self, stmts, env):
-        low = self.cp._low
-        for st in stmts:
-            if isinstance(st, SeqWhile):
-                # sequential driver; body statements distributed recursively
-                def cond(env=env, st=st):
-                    from .lower import Axes
-                    return bool(low.eval(st.cond, env, Axes(), {}, []))
-                while cond():
-                    self._exec_shardmap(st.body, env)
+    def _psum(self, part, op: str):
+        if op == "+":
+            return jax.lax.psum(part, self.dp)
+        if op == "min":
+            return -jax.lax.pmax(-part, self.dp)
+        if op == "max":
+            return jax.lax.pmax(part, self.dp)
+        raise NotImplementedError(op)
+
+    def _exec_shardmap(self, nodes, env, limits):
+        cp = self.cp
+        for node in nodes:
+            if isinstance(node, plan.SeqLoop):
+                # sequential driver; body nodes distributed recursively
+                while bool(cp.executor.eval_scalar(node.cond, env)):
+                    self._exec_shardmap(node.body, env, limits)
                 continue
 
-            bag_driven = isinstance(st, (BulkUpdate, ScalarAgg)) and \
-                _has_bag(st.quals)
+            bag_driven = plan.is_reduce(node) and node.space.has_bag
             if not bag_driven:
                 # replicated execution (identical result on all shards)
-                self.cp._exec([st], env)
+                cp.execute(env, bag_limits=limits, nodes=[node])
                 continue
 
             # local partial ⊕ over the bag shard, then psum over dp
-            names = sorted(self._refs(st) - {st.dest})
-            bagnames = [q.bag for q in st.quals if isinstance(q, BagGen)]
+            parts = tuple(node.parts) if isinstance(node, plan.Fused) \
+                else (node,)
+            dests = tuple(p.dest for p in parts)
+            ops = plan.ops_of(node)
+            params = self.cp.program.params
+            reads = sorted(set(node.reads) - set(dests))
+            # dims are static python ints (they define extents): close over
+            # them — as shard_map operands they would arrive as tracers
+            dims = {n: env[n] for n in reads
+                    if n in params and params[n].kind == "dim"}
+            names = [n for n in reads if n not in dims]
+            bagnames = node.space.bag_names
             in_specs = []
             args = []
             for n in names:
@@ -98,92 +128,39 @@ class DistributedProgram:
                                     else tuple(P() for _ in v))
                 args.append(v)
 
-            dest = env[st.dest]
-            dest_shape = jnp.shape(dest)
-            op = st.op
+            dest_shapes = tuple(jnp.shape(env[d]) for d in dests)
+            dest_dtypes = tuple(jnp.asarray(env[d]).dtype for d in dests)
+            node_lims = {b: limits[b] for b in bagnames if b in limits}
 
-            def local_fn(*vals, _st=st, _names=names, _bags=tuple(bagnames)):
+            def local_fn(*vals, _parts=parts, _names=tuple(names),
+                         _bags=tuple(bagnames), _lims=node_lims, _dims=dims,
+                         _shapes=dest_shapes, _dtypes=dest_dtypes):
                 e2 = dict(zip(_names, vals))
-                ident = _identity(op, jnp.asarray(dest).dtype)
-                e2[_st.dest] = jnp.full(dest_shape, ident)
+                e2.update(_dims)
+                for p, shp, dt in zip(_parts, _shapes, _dtypes):
+                    e2[p.dest] = jnp.full(shp, identity(p.op, dt))
                 # globalize bag indexes: shard-local row r is global
                 # offset + r (needed when the bag index appears in keys)
                 shard = 0
                 for a in self.dp:
                     shard = shard * self.mesh.shape[a] + jax.lax.axis_index(a)
-                offs = {}
-                for b in _bags:
-                    n_loc = e2[b][0].shape[0]
-                    offs[b] = shard * n_loc
-                old = low.bag_offset
-                low.bag_offset = offs
-                try:
-                    if isinstance(_st, ScalarAgg):
-                        part = low.lower_scalar_agg(_st, e2)
-                    else:
-                        part = low.lower_update(_st, e2)
-                finally:
-                    low.bag_offset = old
-                if op == "+":
-                    return jax.lax.psum(part, self.dp)
-                if op == "min":
-                    return -jax.lax.pmax(-part, self.dp)
-                if op == "max":
-                    return jax.lax.pmax(part, self.dp)
-                raise NotImplementedError(op)
+                offs = {b: shard * e2[b][0].shape[0] for b in _bags}
+                ctx = ExecContext(bag_offsets=offs, bag_limits=_lims)
+                return tuple(
+                    self._psum(cp.executor.run_node(p, e2, ctx), p.op)
+                    for p in _parts)
 
-            fn = jax.shard_map(local_fn, mesh=self.mesh,
-                               in_specs=tuple(in_specs),
-                               out_specs=P())
-            partial = fn(*args)
-            env[st.dest] = _COMBINE[op](jnp.asarray(dest), partial)
-
-    def _refs(self, st) -> set[str]:
-        """Names of env values a statement reads."""
-        from .comprehension import Get, RangeGen
-        from .loop_ast import BinOp, Call, Index, UnOp, Var
-        names: set[str] = set()
-
-        def ge(e):
-            if isinstance(e, (Get, Index)):
-                names.add(e.array)
-                for i in e.idxs:
-                    ge(i)
-            elif isinstance(e, BinOp):
-                ge(e.lhs)
-                ge(e.rhs)
-            elif isinstance(e, UnOp):
-                ge(e.e)
-            elif isinstance(e, Call):
-                for a in e.args:
-                    ge(a)
-            elif isinstance(e, Var):
-                names.add(e.name)
-        for q in st.quals:
-            if isinstance(q, BagGen):
-                names.add(q.bag)
-            elif isinstance(q, RangeGen):
-                ge(q.lo)
-                ge(q.hi)
-            else:
-                ge(q.e)
-        ge(st.value)
-        if hasattr(st, "keys"):
-            for k in st.keys:
-                ge(k)
-        # loop vars shadow env names
-        for q in st.quals:
-            if isinstance(q, BagGen):
-                names -= set(q.vals) | {q.idx}
-            elif isinstance(q, RangeGen):
-                names -= {q.var}
-        return {n for n in names if n in self.cp.program.params
-                or n in self.cp.program.outputs}
+            fn = shard_map(local_fn, mesh=self.mesh,
+                           in_specs=tuple(in_specs),
+                           out_specs=tuple(P() for _ in parts))
+            partials = fn(*args)
+            for d, op, partial in zip(dests, ops, partials):
+                env[d] = COMBINE[op](jnp.asarray(env[d]), partial)
 
     # ------------------------- entry -------------------------
     def run(self, inputs: dict) -> dict:
         env = {}
-        placed = self.place(inputs)
+        placed, limits = self.place(inputs)
         for name, t in self.cp.program.params.items():
             v = placed[name]
             if t.kind in ("vector", "matrix", "map"):
@@ -192,9 +169,9 @@ class DistributedProgram:
             else:
                 env[name] = v
         if self.mode == "gspmd":
-            self.cp._exec(self.cp.target, env)
+            self.cp.execute(env, bag_limits=limits)
         else:
-            self._exec_shardmap(self.cp.target, env)
+            self._exec_shardmap(self.cp.plan, env, limits)
         return {n: env[n] for n in self.cp.program.outputs}
 
 

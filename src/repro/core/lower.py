@@ -1,48 +1,60 @@
-"""Physical lowering: target comprehensions → JAX.
+"""Plan execution: physical-plan nodes → JAX.
 
-Each bulk statement is compiled against its *iteration space* (one axis per
-generator; extents from range bounds / bag lengths, static under jit):
+The pipeline is  translate (Fig. 2) → passes.plan_program (operator
+recognition, see passes.py) → PlanExecutor (this module).  The executor
+performs NO recognition: every operator choice was made by the pass
+pipeline; this module only materializes the chosen node, checking the
+runtime guards (extents, packed-vs-dense inputs) that static planning
+cannot see.  When a guard fails the executor walks the node's `fallback`
+chain — results never change, only the operator used.
 
-  value/key/cond expressions  →  broadcasted jnp arrays over the axes
-  Get (array access)          →  gather with clipped indices + inRange mask
-  group-by on computed keys   →  segment-reduce (scatter-⊕) into the
-                                 destination index space  [paper's shuffle]
-  group-by on pure axis keys  →  axis reduction (Rule 17 generalized): sum/
-                                 min/max over the contracted axes — no
-                                 shuffle at all
-  …and when the reduction is a +-product of gathers over axis vars:
-                                 **einsum** — the join+group-by+sum pattern
-                                 becomes an MXU contraction (beyond-paper;
-                                 toggle with optimize_contractions=False for
-                                 the paper-faithful baseline)
-  ◁ merge                     →  scatter (.at[]) with drop semantics for
-                                 out-of-range / masked rows
-  while                       →  lax.while_loop over the mutated-var carry
+Node → JAX mapping:
+
+  MapExpr         broadcasted value over the iteration space; full replace
+                  or meshgrid .at[].set with drop semantics
+  Scatter         .at[].set at computed keys, OOB rows dropped
+  SegmentReduce   scatter-⊕ into the flattened destination index space, or
+                  the Pallas one-hot-MXU segment kernel (backend="pallas")
+  AxisReduce      ⊕-reduce over contracted axes (Rule 17: no shuffle)
+  EinsumContract  jnp.einsum over sliced operands (guard: static offsets
+                  and extents fit) — else its AxisReduce fallback
+  TiledMatmul     block-sparse Pallas tile_matmul on the §5 packed lhs
+                  (guard: lhs arrives as TiledMatrix) — else einsum
+  ScalarReduce    total ⊕-reduce (+ any/all peephole for max/min of
+                  float(bool)); `point` targets one destination cell
+  SeqLoop         lax.while_loop over the mutated-variable carry
+  Fused           parts executed against the shared iteration space
+
+Distributed execution passes bag offsets/limits through ExecContext — plan
+parameters, not executor state — so the same plan serves single-device,
+shard_map and gspmd backends (see distributed.py).
 
 The compiled program is a pure function dict->dict and is jit-compatible
 (dims must be python ints: they define static shapes).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from . import plan as P
 from .analysis import check as check_restrictions
-from .comprehension import (BagGen, BulkStore, BulkUpdate, Cond, Get,
-                            RangeGen, ScalarAgg, ScalarAssign, SeqWhile,
-                            pretty)
+from .comprehension import Get, pretty
 from .loop_ast import (BinOp, Call, Const, Program, RejectionError, UnOp,
                        Var)
+from .passes import PlanConfig, plan_program
 from .translate import translate
 
 
 # ---------------------------------------------------------------------------
-# helpers
+# scalar op tables (public: distributed.py composes partials with these)
 # ---------------------------------------------------------------------------
 
-_OPS = {
+OPS = {
     "+": jnp.add, "-": jnp.subtract, "*": jnp.multiply, "/": jnp.divide,
     "//": jnp.floor_divide, "%": jnp.mod, "**": jnp.power,
     "==": jnp.equal, "!=": jnp.not_equal, "<": jnp.less,
@@ -50,19 +62,20 @@ _OPS = {
     "and": jnp.logical_and, "or": jnp.logical_or,
 }
 
-_FNS = {"sqrt": jnp.sqrt, "exp": jnp.exp, "log": jnp.log, "abs": jnp.abs,
-        "sin": jnp.sin, "cos": jnp.cos, "tanh": jnp.tanh,
-        "sigmoid": jax.nn.sigmoid, "float": lambda x: jnp.asarray(x, jnp.float32),
-        "int": lambda x: jnp.asarray(x, jnp.int32),
-        "min": jnp.minimum, "max": jnp.maximum,
-        "where": lambda c, a, b: jnp.where(c, a, b)}
+FNS = {"sqrt": jnp.sqrt, "exp": jnp.exp, "log": jnp.log, "abs": jnp.abs,
+       "sin": jnp.sin, "cos": jnp.cos, "tanh": jnp.tanh,
+       "sigmoid": jax.nn.sigmoid, "float": lambda x: jnp.asarray(x, jnp.float32),
+       "int": lambda x: jnp.asarray(x, jnp.int32),
+       "min": jnp.minimum, "max": jnp.maximum,
+       "where": lambda c, a, b: jnp.where(c, a, b)}
 
-_REDUCE = {"+": jnp.sum, "*": jnp.prod, "min": jnp.min, "max": jnp.max}
-_COMBINE = {"+": jnp.add, "*": jnp.multiply, "min": jnp.minimum,
-            "max": jnp.maximum}
+REDUCE = {"+": jnp.sum, "*": jnp.prod, "min": jnp.min, "max": jnp.max}
+COMBINE = {"+": jnp.add, "*": jnp.multiply, "min": jnp.minimum,
+           "max": jnp.maximum}
 
 
-def _identity(op: str, dtype) -> jnp.ndarray:
+def identity(op: str, dtype) -> jnp.ndarray:
+    """The ⊕ identity element for masked-out rows."""
     if op == "+":
         return jnp.zeros((), dtype)
     if op == "*":
@@ -77,7 +90,7 @@ def _scatter_op(ref, op: str):
 
 
 class Axes:
-    """Iteration space: ordered axes with extents; values broadcast over it."""
+    """Materialized iteration space: ordered axes with concrete extents."""
 
     def __init__(self):
         self.order: list[str] = []
@@ -100,18 +113,25 @@ class Axes:
         return jnp.reshape(arr, shape)
 
 
+@dataclass(frozen=True)
+class ExecContext:
+    """Per-call plan parameters for distributed execution: traced global
+    index offsets for sharded bags, and logical bag lengths when columns
+    were padded to a multiple of the shard count."""
+    bag_offsets: dict = field(default_factory=dict)
+    bag_limits: dict = field(default_factory=dict)
+
+
+_EMPTY_CTX = ExecContext()
+
+
 # ---------------------------------------------------------------------------
-# statement compilation (closures over env dict)
+# plan executor
 # ---------------------------------------------------------------------------
 
-class _StmtLowerer:
-    def __init__(self, prog: Program, optimize_contractions: bool):
+class PlanExecutor:
+    def __init__(self, prog: Program):
         self.prog = prog
-        self.opt_contract = optimize_contractions
-        # distributed mode: traced global-index offsets for sharded bags
-        self.bag_offset: dict = {}
-        # route +-group-bys through the Pallas one-hot-MXU kernel
-        self.use_kernels: bool = False
 
     # ---- static scalars (dims / range bounds) ----
     def static_int(self, e, env) -> int:
@@ -130,29 +150,37 @@ class _StmtLowerer:
                         "//": l // r, "/": l // r}[e.op])
         raise RejectionError(f"non-static range bound {e}")
 
-    # ---- build iteration space ----
-    def axes_of(self, quals, env) -> tuple[Axes, dict, list]:
+    # ---- materialize an IterSpace against the env ----
+    def build_space(self, space: P.IterSpace, env, ctx: ExecContext):
         ax = Axes()
-        binding: dict[str, tuple] = {}   # var -> ("range", axis, lo) | ("bagval", axis, col)
-        conds = []
-        for q in quals:
-            if isinstance(q, RangeGen):
-                lo = self.static_int(q.lo, env)
-                hi = self.static_int(q.hi, env)
-                ax.add(q.var, max(hi - lo, 0))
-                binding[q.var] = ("range", q.var, lo)
-            elif isinstance(q, BagGen):
-                bagv = env[q.bag]
+        binding: dict[str, tuple] = {}  # var -> ("range", axis, lo)|("bagval", axis, col)
+        for a in space.axes:
+            if a.kind == "range":
+                lo = self.static_int(a.lo, env)
+                hi = self.static_int(a.hi, env)
+                ax.add(a.var, max(hi - lo, 0))
+                binding[a.var] = ("range", a.var, lo)
+            else:
+                bagv = env[a.bag]
                 cols = bagv if isinstance(bagv, tuple) else (bagv,)
                 n = int(cols[0].shape[0])
-                ax.add(q.idx, n)
-                binding[q.idx] = ("range", q.idx,
-                                  self.bag_offset.get(q.bag, 0))
-                for j, v in enumerate(q.vals):
-                    binding[v] = ("bagval", q.idx, cols[j])
-            else:
-                conds.append(q.e)
-        return ax, binding, conds
+                ax.add(a.var, n)
+                binding[a.var] = ("range", a.var,
+                                  ctx.bag_offsets.get(a.bag, 0))
+        base_masks = []
+        for a in space.axes:
+            if a.kind != "bag":
+                continue
+            bagv = env[a.bag]
+            cols = bagv if isinstance(bagv, tuple) else (bagv,)
+            for j, v in enumerate(a.vals):
+                binding[v] = ("bagval", a.var, cols[j])
+            lim = ctx.bag_limits.get(a.bag)
+            if lim is not None:
+                off = binding[a.var][2]
+                base_masks.append(ax.expand(
+                    (off + jnp.arange(ax.extent[a.var])) < lim, a.var))
+        return ax, binding, list(space.conds), base_masks
 
     # ---- expression evaluation over the iteration space ----
     def eval(self, e, env, ax: Axes, binding, masks: list):
@@ -165,19 +193,21 @@ class _StmtLowerer:
                     return ax.expand(aux + jnp.arange(ax.extent[axis]), axis)
                 return ax.expand(aux, axis)
             return jnp.asarray(env[e.name])
-        if isinstance(e, Get):
+        if isinstance(e, (P.Gather, Get)):
             arr = env[e.array]
             from .tiles import TiledMatrix, unpack
             if isinstance(arr, TiledMatrix):   # §5 fallback: unpack on read
                 arr = unpack(arr)
-            # identity-traversal fast path: V[i] / M[i,j] over full ranges is
-            # the array itself, broadcast into the iteration space (no gather)
-            if all(isinstance(ix, Var) and ix.name in binding
-                   and binding[ix.name][0] == "range"
-                   and isinstance(binding[ix.name][2], int)
-                   and binding[ix.name][2] == 0
-                   and ax.extent[ix.name] == d
-                   for ix, d in zip(e.idxs, arr.shape)) and \
+            # identity-traversal broadcast: statically marked eligible, and
+            # the runtime extents cover the array exactly (no gather)
+            bc_ok = e.broadcast_ok if isinstance(e, P.Gather) else True
+            if bc_ok and len(e.idxs) == len(arr.shape) and \
+                    all(isinstance(ix, Var) and ix.name in binding
+                        and binding[ix.name][0] == "range"
+                        and isinstance(binding[ix.name][2], int)
+                        and binding[ix.name][2] == 0
+                        and ax.extent[ix.name] == d
+                        for ix, d in zip(e.idxs, arr.shape)) and \
                     len({ix.name for ix in e.idxs}) == len(e.idxs):
                 names = [ix.name for ix in e.idxs]
                 shape = [1] * len(ax.order)
@@ -196,15 +226,15 @@ class _StmtLowerer:
                 return jnp.take(arr, clipped[0], axis=0)
             return arr[tuple(jnp.broadcast_arrays(*clipped))]
         if isinstance(e, BinOp):
-            return _OPS[e.op](self.eval(e.lhs, env, ax, binding, masks),
-                              self.eval(e.rhs, env, ax, binding, masks))
+            return OPS[e.op](self.eval(e.lhs, env, ax, binding, masks),
+                             self.eval(e.rhs, env, ax, binding, masks))
         if isinstance(e, UnOp):
             v = self.eval(e.e, env, ax, binding, masks)
             return -v if e.op == "neg" else jnp.logical_not(v)
         if isinstance(e, Call):
-            return _FNS[e.fn](*[self.eval(a, env, ax, binding, masks)
-                                for a in e.args])
-        raise RejectionError(f"cannot lower expression {e}")
+            return FNS[e.fn](*[self.eval(a, env, ax, binding, masks)
+                               for a in e.args])
+        raise RejectionError(f"cannot execute expression {e}")
 
     def _mask(self, conds, env, ax, binding, masks):
         for c in conds:
@@ -216,149 +246,216 @@ class _StmtLowerer:
             m = jnp.logical_and(m, x)
         return jnp.broadcast_to(m, ax.shape()) if ax.order else m
 
-    # ---- key classification ----
-    def _axis_keys(self, keys, binding):
-        """keys that are distinct pure generator-axis vars, else None."""
-        names = []
-        for k in keys:
-            if isinstance(k, Var) and k.name in binding \
-                    and binding[k.name][0] == "range":
-                names.append(k.name)
+    # ------------------------------------------------------------------
+    # node execution.  run_node returns the NEW VALUE of each destination
+    # (a tuple for Fused); execute() assigns them into the env.
+    # ------------------------------------------------------------------
+
+    def execute(self, nodes, env, ctx: ExecContext = _EMPTY_CTX):
+        for node in nodes:
+            if isinstance(node, P.SeqLoop):
+                self._exec_seq_loop(node, env, ctx)
+            elif isinstance(node, P.Fused):
+                for part, v in zip(node.parts, self.run_node(node, env, ctx)):
+                    env[part.dest] = v
             else:
+                env[node.dest] = self.run_node(node, env, ctx)
+
+    def run_node(self, node, env, ctx: ExecContext = _EMPTY_CTX):
+        if isinstance(node, P.MapExpr):
+            return self._exec_map(node, env, ctx)
+        if isinstance(node, P.Scatter):
+            return self._exec_scatter(node, env, ctx)
+        if isinstance(node, P.SegmentReduce):
+            return self._exec_segment(node, env, ctx)
+        if isinstance(node, P.AxisReduce):
+            return self._exec_axis_reduce(node, env, ctx)
+        if isinstance(node, P.EinsumContract):
+            return self._exec_einsum(node, env, ctx)
+        if isinstance(node, P.TiledMatmul):
+            return self._exec_tiled(node, env, ctx)
+        if isinstance(node, P.ScalarReduce):
+            return self._exec_scalar_reduce(node, env, ctx)
+        if isinstance(node, P.Fused):
+            return tuple(self.run_node(p, env, ctx) for p in node.parts)
+        raise RejectionError(f"cannot execute plan node {node}")
+
+    # ---- stores ----
+    def _exec_map(self, node: P.MapExpr, env, ctx):
+        ax, binding, conds, base = self.build_space(node.space, env, ctx)
+        if node.key_axes is None:          # guarded scalar assignment
+            masks = list(base)
+            val = self.eval(node.value, env, ax, binding, masks)
+            m = self._mask(conds, env, ax, binding, masks)
+            if m is not None:
+                old = env.get(node.dest, jnp.zeros_like(val))
+                return jnp.where(m, val, old)
+            return val
+
+        dest = env[node.dest]
+        masks = list(base)
+        val = self.eval(node.value, env, ax, binding, masks)
+        m = self._mask(conds, env, ax, binding, masks)
+        key_axes = node.key_axes
+        val = jnp.broadcast_to(val, ax.shape())
+        perm = [ax.order.index(a) for a in key_axes]
+        val = jnp.transpose(val, perm)
+        if m is not None:
+            m = jnp.transpose(jnp.broadcast_to(m, ax.shape()), perm)
+        los = [binding[a][2] for a in key_axes]
+        exts = [ax.extent[a] for a in key_axes]
+        static0 = all(isinstance(l, int) and l == 0 for l in los)
+        if tuple(exts) == dest.shape and static0 and m is None:
+            return val.astype(dest.dtype)                 # full replace
+        grids = list(jnp.meshgrid(
+            *[los[i] + jnp.arange(exts[i]) for i in range(len(exts))],
+            indexing="ij"))
+        if m is not None:
+            grids[0] = jnp.where(m, grids[0], dest.shape[0])  # drop
+        return dest.at[tuple(grids)].set(val.astype(dest.dtype), mode="drop")
+
+    def _exec_scatter(self, node: P.Scatter, env, ctx):
+        ax, binding, conds, base = self.build_space(node.space, env, ctx)
+        dest = env[node.dest]
+        masks = list(base)
+        val = self.eval(node.value, env, ax, binding, masks)
+        m = self._mask(conds, env, ax, binding, masks)
+        shape = ax.shape()
+        val = jnp.broadcast_to(val, shape)
+        kk = [jnp.broadcast_to(jnp.asarray(
+            self.eval(k, env, ax, binding, masks), jnp.int32), shape)
+            for k in node.keys]
+        ok = jnp.ones(shape, bool) if m is None else m
+        for k, d in zip(kk, dest.shape):
+            ok &= (k >= 0) & (k < d)
+        kk = [jnp.where(ok, k, d) for k, d in zip(kk, dest.shape)]
+        return dest.at[tuple(kk)].set(val.astype(dest.dtype), mode="drop")
+
+    # ---- reductions ----
+    def _exec_segment(self, node: P.SegmentReduce, env, ctx):
+        ax, binding, conds, base = self.build_space(node.space, env, ctx)
+        dest = env[node.dest]
+        masks = list(base)
+        keys = [self.eval(k, env, ax, binding, masks) for k in node.keys]
+        val = self.eval(node.value, env, ax, binding, masks)
+        m = self._mask(conds, env, ax, binding, masks)
+        shape = ax.shape()
+        val = jnp.broadcast_to(val, shape).reshape(-1)
+        kk = [jnp.broadcast_to(jnp.asarray(k, jnp.int32), shape).reshape(-1)
+              for k in keys]
+        flat, num = self._ravel_keys(kk, dest.shape)
+        if m is not None:
+            flat = jnp.where(m.reshape(-1), flat, num)  # dropped
+        if node.backend == "pallas":
+            # Pallas one-hot-MXU segment kernel as the group-by backend
+            from ..kernels import ops as kops
+            seg = kops.segment_sum(flat, val[:, None].astype(jnp.float32),
+                                   num)[:, 0]
+        else:
+            seg = jnp.full((num,), identity(node.op, val.dtype), val.dtype)
+            seg = _scatter_op(seg.at[flat], node.op)(val, mode="drop")
+        return COMBINE[node.op](dest,
+                                seg.reshape(dest.shape).astype(dest.dtype))
+
+    def _ravel_keys(self, kk, dshape):
+        num = 1
+        for d in dshape:
+            num *= d
+        flat = jnp.zeros_like(kk[0])
+        ok = jnp.ones_like(kk[0], dtype=bool)
+        for k, d in zip(kk, dshape):
+            ok &= (k >= 0) & (k < d)
+            flat = flat * d + jnp.clip(k, 0, d - 1)
+        flat = jnp.where(ok, flat, num)
+        return flat, num
+
+    def _keyed_combine(self, dest, partial, key_axes, ax, binding, op,
+                       in_key_order):
+        """Scatter-⊕ a partial (indexed by the key axes) into dest."""
+        if not in_key_order:
+            cur = [a for a in ax.order if a in key_axes]
+            partial = jnp.transpose(partial,
+                                    [cur.index(a) for a in key_axes])
+        los = [binding[a][2] for a in key_axes]
+        exts = [ax.extent[a] for a in key_axes]
+        static0 = all(isinstance(l, int) and l == 0 for l in los)
+        if tuple(exts) == dest.shape and static0:
+            return COMBINE[op](dest, partial.astype(dest.dtype))
+        grids = tuple(
+            (los[i] + jnp.arange(exts[i])).reshape(
+                [-1 if j == i else 1 for j in range(len(exts))])
+            for i in range(len(exts)))
+        return _scatter_op(dest.at[grids], op)(
+            partial.astype(dest.dtype), mode="drop")
+
+    def _exec_axis_reduce(self, node: P.AxisReduce, env, ctx):
+        ax, binding, conds, base = self.build_space(node.space, env, ctx)
+        dest = env[node.dest]
+        contracted = node.contracted
+        masks = list(base)
+        val = self.eval(node.value, env, ax, binding, masks)
+        m = self._mask(conds, env, ax, binding, masks)
+        val = jnp.broadcast_to(val, ax.shape())
+        if m is not None:
+            val = jnp.where(m, val, identity(node.op, val.dtype))
+        if contracted:
+            partial = REDUCE[node.op](
+                val, axis=tuple(ax.pos(a) for a in contracted))
+        else:
+            partial = val
+        return self._keyed_combine(dest, partial, node.key_axes, ax, binding,
+                                   node.op, in_key_order=False)
+
+    # ---- contractions (runtime guards; fall back on failure) ----
+    def _sliced_operand(self, arr, faxes, ax, binding):
+        """Slice a contraction operand to the iteration extents along each
+        factor axis; None when an offset/extent guard fails."""
+        for dim_i, (d, axn) in enumerate(zip(arr.shape, faxes)):
+            lo = binding[axn][2]
+            if not isinstance(lo, int):
                 return None
-        return names if len(set(names)) == len(names) else None
+            if lo != 0 or ax.extent[axn] != d:
+                if lo + ax.extent[axn] > d:
+                    return None
+                arr = jax.lax.slice_in_dim(arr, lo, lo + ax.extent[axn],
+                                           axis=dim_i)
+        return arr
 
-    # ---- einsum contraction recognition (beyond-paper) ----
-    def _try_einsum(self, st: BulkUpdate, key_axes, ax: Axes, env, binding,
-                    contracted):
-        if not self.opt_contract or st.op != "+" or not contracted:
-            return None
-        factors = []
-        others = []
-
-        def flatten(e):
-            if isinstance(e, BinOp) and e.op == "*":
-                flatten(e.lhs)
-                flatten(e.rhs)
-            elif isinstance(e, Get):
-                factors.append(e)
-            else:
-                others.append(e)
-        flatten(st.value)
-        if len(factors) < 1:
-            return None
-        # every factor index must be a pure range-axis var with full extent
+    def _product_partial(self, ef: P.EinsumFactors, key_axes, ax, binding,
+                         env):
+        """jnp.einsum over the factor gathers; None when an offset/extent
+        guard fails (caller falls back)."""
+        from .tiles import TiledMatrix, unpack
         letters = {a: chr(ord('a') + i) for i, a in enumerate(ax.order)}
-        from .tiles import TiledMatrix, matmul_tiled, unpack
         specs = []
         operands = []
-        tiled_first = len(factors) == 2 and \
-            isinstance(env[factors[0].array], TiledMatrix)
-        for f in factors:
+        for f, faxes in zip(ef.factors, ef.factor_axes):
             arr = env[f.array]
             if isinstance(arr, TiledMatrix):
-                if not tiled_first or f is not factors[0]:
-                    arr = unpack(arr)   # §5 fusion only on the lhs of matmul
-            spec = ""
-            for d, ix in zip(arr.shape, f.idxs):
-                if not (isinstance(ix, Var) and ix.name in binding
-                        and binding[ix.name][0] == "range"):
-                    return None
-                axn = ix.name
-                lo = binding[axn][2]
-                if not isinstance(lo, int):
-                    return None
-                if lo != 0 or ax.extent[axn] != d:
-                    if lo + ax.extent[axn] > d:
-                        return None
-                    arr = jax.lax.slice_in_dim(arr, lo, lo + ax.extent[axn],
-                                               axis=len(spec))
-                spec += letters[axn]
+                arr = unpack(arr)
+            spec = "".join(letters[axn]
+                           for _, axn in zip(arr.shape, faxes))
+            arr = self._sliced_operand(arr, faxes, ax, binding)
+            if arr is None:
+                return None
             specs.append(spec)
             operands.append(arr)
-        for o in others:  # residual scalar factors only
-            if isinstance(o, Const):
-                continue
-            if isinstance(o, Var) and o.name not in binding:
-                continue
-            return None
         out_spec = "".join(letters[a] for a in key_axes)
-        used = set("".join(specs))
-        if not set(out_spec) <= used or not \
-                all(letters[a] in used for a in contracted):
-            return None
-        # §5 packed-array fusion: matmul-shaped contraction on a tiled lhs
-        # runs the block-sparse Pallas kernel directly on the tiles
-        if tiled_first and specs[0][1] == specs[1][0] and \
-                out_spec == specs[0][0] + specs[1][1] and \
-                len(specs[0]) == 2 and len(specs[1]) == 2:
-            res = matmul_tiled(env[factors[0].array], operands[1])
-        else:
-            if tiled_first:
-                operands = [unpack(env[factors[0].array])] + operands[1:]
-            res = jnp.einsum(",".join(specs) + "->" + out_spec, *operands)
-        for o in others:
+        res = jnp.einsum(",".join(specs) + "->" + out_spec, *operands)
+        for o in ef.others:
             res = res * self.eval(o, env, ax, binding, [])
         return res
 
-    def _axes_used(self, e, binding, ax):
-        used = set()
-
-        def go(x):
-            if isinstance(x, Var) and x.name in binding:
-                k, axis, _ = binding[x.name]
-                used.add(axis)
-            elif isinstance(x, Get):
-                for i in x.idxs:
-                    go(i)
-            elif isinstance(x, BinOp):
-                go(x.lhs)
-                go(x.rhs)
-            elif isinstance(x, UnOp):
-                go(x.e)
-            elif isinstance(x, Call):
-                for a in x.args:
-                    go(a)
-        go(e)
-        return used
-
-    def _try_term_split(self, st, key_axes, ax, env, binding, contracted):
-        """value = s1*s2*(Σ terms): strip axis-free scalar factors, einsum
-        each product term; a term free of the contracted axes reduces to
-        extent-product x term (Σ_j c = |j|·c) instead of a grid."""
-        scalars: list = []
-        value = st.value
-        while isinstance(value, BinOp) and value.op == "*":
-            if not self._axes_used(value.lhs, binding, ax):
-                scalars.append(value.lhs)
-                value = value.rhs
-            elif not self._axes_used(value.rhs, binding, ax):
-                scalars.append(value.rhs)
-                value = value.lhs
-            else:
-                break
-        terms: list = []
-
-        def split(e, sign):
-            if isinstance(e, BinOp) and e.op in ("+", "-"):
-                split(e.lhs, sign)
-                split(e.rhs, sign if e.op == "+" else -sign)
-            elif isinstance(e, UnOp) and e.op == "neg":
-                split(e.e, -sign)
-            else:
-                terms.append((sign, e))
-        split(value, 1)
-        if len(terms) < 2:
-            return None
-
+    def _terms_partial(self, node: P.EinsumContract, ax, binding, env):
+        key_axes = node.key_axes
+        contracted = node.contracted
         key_exts = tuple(ax.extent[a] for a in ax.order if a in key_axes)
         cur = [a for a in ax.order if a in key_axes]
         perm = [cur.index(a) for a in key_axes]
         total = None
-        for sign, term in terms:
-            used = self._axes_used(term, binding, ax)
-            if not (used & set(contracted)):
-                masks: list = []
+        for sign, term, ef in node.terms:
+            if ef is None:      # term free of the contracted axes:
+                masks: list = []         # Σ_j c = |j|·c, no grid
                 v = self.eval(term, env, ax, binding, masks)
                 if masks:
                     return None
@@ -373,179 +470,108 @@ class _StmtLowerer:
                     part = jnp.broadcast_to(part, key_exts)
                 part = jnp.transpose(part, perm) * mult
             else:
-                sub = BulkUpdate(st.dest, st.keys, "+", term, st.quals)
-                part = self._try_einsum(sub, key_axes, ax, env, binding,
-                                        contracted)
+                part = self._product_partial(ef, key_axes, ax, binding, env)
                 if part is None:
                     return None
             total = part * sign if total is None else total + part * sign
-        for sc in scalars:
+        for sc in node.scalars:
             total = total * self.eval(sc, env, ax, binding, [])
         return total
 
-    # ---- bulk statements ----
-    def lower_update(self, st: BulkUpdate, env):
-        ax, binding, conds = self.axes_of(st.quals, env)
-        dest = env[st.dest]
-
-        # Rule (16): constant group-by keys -> one total aggregation and a
-        # single-element ⊕ update (no segment scatter)
-        if st.keys and all(isinstance(k, Const) for k in st.keys):
-            total = self._total_reduce(st.op, st.value, conds, env, ax,
-                                       binding)
-            ii = tuple(int(k.value) for k in st.keys)
-            return _scatter_op(dest.at[ii], st.op)(total.astype(dest.dtype))
-
-        key_axes = self._axis_keys(st.keys, binding)
-
-        if key_axes is not None:
-            contracted = [a for a in ax.order if a not in key_axes]
-            ein = self._try_einsum(st, key_axes, ax, env, binding, contracted)
-            if ein is None and not conds and st.op == "+" and contracted \
-                    and self.opt_contract:
-                ein = self._try_term_split(st, key_axes, ax, env, binding,
-                                           contracted)
-            if ein is not None and not conds:
-                partial = ein
-                in_key_order = True
+    def _exec_einsum(self, node: P.EinsumContract, env, ctx):
+        ax, binding, conds, base = self.build_space(node.space, env, ctx)
+        partial = None
+        if not base:       # padded-bag masks need the masked fallback path
+            if node.product is not None:
+                partial = self._product_partial(node.product, node.key_axes,
+                                                ax, binding, env)
             else:
-                in_key_order = False
-                masks: list = []
-                val = self.eval(st.value, env, ax, binding, masks)
-                m = self._mask(conds, env, ax, binding, masks)
-                val = jnp.broadcast_to(val, ax.shape())
-                if m is not None:
-                    val = jnp.where(m, val, _identity(st.op, val.dtype))
-                if contracted:
-                    partial = _REDUCE[st.op](
-                        val, axis=tuple(ax.pos(a) for a in contracted))
-                else:
-                    partial = val
-            # reorder to key order + scatter-⊕ at the (affine) offsets
-            if not in_key_order:
-                cur = [a for a in ax.order if a in key_axes]
-                partial = jnp.transpose(partial,
-                                        [cur.index(a) for a in key_axes])
-            los = [binding[a][2] for a in key_axes]
-            exts = [ax.extent[a] for a in key_axes]
-            static0 = all(isinstance(l, int) and l == 0 for l in los)
-            if tuple(exts) == dest.shape and static0:
-                return _COMBINE[st.op](dest, partial.astype(dest.dtype))
-            grids = tuple(
-                (los[i] + jnp.arange(exts[i])).reshape(
-                    [-1 if j == i else 1 for j in range(len(exts))])
-                for i in range(len(exts)))
-            return _scatter_op(dest.at[grids], st.op)(
-                partial.astype(dest.dtype), mode="drop")
+                partial = self._terms_partial(node, ax, binding, env)
+        if partial is None:
+            return self.run_node(node.fallback, env, ctx)
+        dest = env[node.dest]
+        return self._keyed_combine(dest, partial, node.key_axes, ax, binding,
+                                   "+", in_key_order=True)
 
-        # computed keys → flatten + segment-⊕ (the paper's group-by)
-        masks = []
-        keys = [self.eval(k, env, ax, binding, masks) for k in st.keys]
-        val = self.eval(st.value, env, ax, binding, masks)
-        m = self._mask(conds, env, ax, binding, masks)
-        shape = ax.shape()
-        val = jnp.broadcast_to(val, shape).reshape(-1)
-        kk = [jnp.broadcast_to(jnp.asarray(k, jnp.int32), shape).reshape(-1)
-              for k in keys]
-        flat, num = self._ravel_keys(kk, dest.shape)
-        if m is not None:
-            flat = jnp.where(m.reshape(-1), flat, num)  # dropped
-        if getattr(self, "use_kernels", False) and st.op == "+":
-            # Pallas one-hot-MXU segment kernel as the group-by backend
-            from ..kernels import ops as kops
-            seg = kops.segment_sum(flat, val[:, None].astype(jnp.float32),
-                                   num)[:, 0]
-        else:
-            seg = jnp.full((num,), _identity(st.op, val.dtype), val.dtype)
-            seg = _scatter_op(seg.at[flat], st.op)(val, mode="drop")
-        return _COMBINE[st.op](dest, seg.reshape(dest.shape).astype(dest.dtype))
+    def _exec_tiled(self, node: P.TiledMatmul, env, ctx):
+        from .tiles import TiledMatrix, matmul_tiled, unpack
+        ein = node.contract
+        lhs = env[node.lhs]
+        if not isinstance(lhs, TiledMatrix):
+            return self.run_node(ein, env, ctx)
+        ax, binding, conds, base = self.build_space(node.space, env, ctx)
+        if base:
+            return self.run_node(ein, env, ctx)
+        # packed lhs must be used at full extent (no slicing on tiles)
+        for d, axn in zip(lhs.shape, ein.product.factor_axes[0]):
+            lo = binding[axn][2]
+            if not isinstance(lo, int) or lo != 0 or ax.extent[axn] != d:
+                return self.run_node(ein, env, ctx)
+        rhs = env[node.rhs]
+        if isinstance(rhs, TiledMatrix):
+            rhs = unpack(rhs)
+        rhs = self._sliced_operand(rhs, ein.product.factor_axes[1], ax,
+                                   binding)
+        if rhs is None:
+            return self.run_node(ein, env, ctx)
+        res = matmul_tiled(lhs, rhs)
+        for o in ein.product.others:
+            res = res * self.eval(o, env, ax, binding, [])
+        dest = env[node.dest]
+        return self._keyed_combine(dest, res, ein.key_axes, ax, binding,
+                                   "+", in_key_order=True)
 
-    def _ravel_keys(self, kk, dshape):
-        num = 1
-        for d in dshape:
-            num *= d
-        flat = jnp.zeros_like(kk[0])
-        ok = jnp.ones_like(kk[0], dtype=bool)
-        for k, d in zip(kk, dshape):
-            ok &= (k >= 0) & (k < d)
-            flat = flat * d + jnp.clip(k, 0, d - 1)
-        flat = jnp.where(ok, flat, num)
-        return flat, num
-
-    def lower_store(self, st: BulkStore, env):
-        ax, binding, conds = self.axes_of(st.quals, env)
-        dest = env[st.dest]
+    # ---- scalar reductions ----
+    def _total_reduce(self, node: P.ScalarReduce, env, ax, binding, conds,
+                      base):
         masks: list = []
-        val = self.eval(st.value, env, ax, binding, masks)
-        m = self._mask(conds, env, ax, binding, masks)
-        key_axes = self._axis_keys(st.keys, binding)
-
-        if key_axes is not None and set(key_axes) == set(ax.order):
-            val = jnp.broadcast_to(val, ax.shape())
-            perm = [ax.order.index(a) for a in key_axes]
-            val = jnp.transpose(val, perm)
-            if m is not None:
-                m = jnp.transpose(jnp.broadcast_to(m, ax.shape()), perm)
-            los = [binding[a][2] for a in key_axes]
-            exts = [ax.extent[a] for a in key_axes]
-            static0 = all(isinstance(l, int) and l == 0 for l in los)
-            if tuple(exts) == dest.shape and static0 and m is None:
-                return val.astype(dest.dtype)                 # full replace
-            grids = list(jnp.meshgrid(
-                *[los[i] + jnp.arange(exts[i]) for i in range(len(exts))],
-                indexing="ij"))
-            if m is not None:
-                grids[0] = jnp.where(m, grids[0], dest.shape[0])  # drop
-            return dest.at[tuple(grids)].set(val.astype(dest.dtype),
-                                             mode="drop")
-
-        # affine computed keys → scatter (restrictions ⇒ no duplicates)
-        shape = ax.shape()
-        val = jnp.broadcast_to(val, shape)
-        kk = [jnp.broadcast_to(jnp.asarray(
-            self.eval(k, env, ax, binding, masks), jnp.int32), shape)
-            for k in st.keys]
-        ok = jnp.ones(shape, bool) if m is None else m
-        for k, d in zip(kk, dest.shape):
-            ok &= (k >= 0) & (k < d)
-        kk = [jnp.where(ok, k, d) for k, d in zip(kk, dest.shape)]
-        return dest.at[tuple(kk)].set(val.astype(dest.dtype), mode="drop")
-
-    def _total_reduce(self, op, value, conds, env, ax, binding):
-        """⊕-reduce `value` over the whole iteration space.  Peephole:
-        max/min over float(bool) lowers to any/all (XLA-CPU f32 max-reduce
-        is ~20x slower than a bool reduce; same result)."""
-        from .loop_ast import Call as _Call
-        masks: list = []
-        if op in ("max", "min") and isinstance(value, _Call) and \
-                value.fn == "float" and not conds:
-            b = self.eval(value.args[0], env, ax, binding, masks)
+        if node.bool_any is not None and not base:
+            # peephole: max/min over float(bool) → any/all (XLA-CPU f32
+            # max-reduce is ~20x slower than a bool reduce; same result)
+            b = self.eval(node.bool_any, env, ax, binding, masks)
             if not masks and ax.order:
-                red = jnp.any if op == "max" else jnp.all
+                red = jnp.any if node.op == "max" else jnp.all
                 return red(jnp.asarray(b, bool)).astype(jnp.float32)
-            masks = []
-        val = self.eval(value, env, ax, binding, masks)
+        masks = list(base)
+        val = self.eval(node.value, env, ax, binding, masks)
         m = self._mask(conds, env, ax, binding, masks)
         val = jnp.broadcast_to(val, ax.shape()) if ax.order else val
         if m is not None:
-            val = jnp.where(m, val, _identity(op, jnp.asarray(val).dtype))
-        return _REDUCE[op](val) if ax.order else val
+            val = jnp.where(m, val, identity(node.op,
+                                             jnp.asarray(val).dtype))
+        return REDUCE[node.op](val) if ax.order else val
 
-    def lower_scalar_agg(self, st: ScalarAgg, env):
-        ax, binding, conds = self.axes_of(st.quals, env)
-        dest = jnp.asarray(env[st.dest])
-        total = self._total_reduce(st.op, st.value, conds, env, ax, binding)
-        return _COMBINE[st.op](dest, total.astype(dest.dtype))
+    def _exec_scalar_reduce(self, node: P.ScalarReduce, env, ctx):
+        ax, binding, conds, base = self.build_space(node.space, env, ctx)
+        total = self._total_reduce(node, env, ax, binding, conds, base)
+        dest = env[node.dest]
+        if node.point is not None:      # Rule 16: one-cell ⊕ update
+            return _scatter_op(dest.at[node.point], node.op)(
+                total.astype(dest.dtype))
+        dest = jnp.asarray(dest)
+        return COMBINE[node.op](dest, total.astype(dest.dtype))
 
-    def lower_scalar_assign(self, st: ScalarAssign, env):
-        ax, binding, conds = self.axes_of(st.quals, env)
-        masks: list = []
-        val = self.eval(st.value, env, ax, binding, masks)
-        m = self._mask(conds, env, ax, binding, masks)
-        if m is not None:
-            old = env.get(st.dest, jnp.zeros_like(val))
-            return jnp.where(m, val, old)
-        return val
+    # ---- sequential loop ----
+    def _exec_seq_loop(self, node: P.SeqLoop, env, ctx):
+        carry0 = tuple(jnp.asarray(env[n]) for n in node.carry)
+
+        def cond_fn(c, _names=node.carry, _n=node):
+            e2 = dict(env)
+            e2.update(dict(zip(_names, c)))
+            return jnp.asarray(self.eval(_n.cond, e2, Axes(), {}, []), bool)
+
+        def body_fn(c, _names=node.carry, _n=node):
+            e2 = dict(env)
+            e2.update(dict(zip(_names, c)))
+            self.execute(_n.body, e2, ctx)
+            return tuple(jnp.asarray(e2[n]) for n in _names)
+
+        out = jax.lax.while_loop(cond_fn, body_fn, carry0)
+        env.update(dict(zip(node.carry, out)))
+
+    def eval_scalar(self, e, env):
+        """Evaluate an expression outside any iteration space."""
+        return self.eval(e, env, Axes(), {}, [])
 
 
 # ---------------------------------------------------------------------------
@@ -557,55 +583,26 @@ class CompiledProgram:
                  use_kernels=False):
         self.program = prog
         self.target = target
-        self._low = _StmtLowerer(prog, optimize_contractions)
-        self._low.use_kernels = use_kernels
+        self.config = PlanConfig(optimize_contractions=optimize_contractions,
+                                 use_kernels=use_kernels)
+        self.plan = plan_program(target, prog, self.config)
+        self.executor = PlanExecutor(prog)
 
     def pretty_target(self) -> str:
         return "\n".join(pretty(s) for s in self.target)
 
-    def _mutated(self, stmts) -> list[str]:
-        names = []
-        for s in stmts:
-            if isinstance(s, SeqWhile):
-                names += self._mutated(s.body)
-            else:
-                if s.dest not in names:
-                    names.append(s.dest)
-        return names
+    def explain(self, tiled=()) -> str:
+        """Spark-EXPLAIN-style dump of the chosen physical operator per
+        statement.  `tiled` names params assumed to arrive §5-packed."""
+        return P.explain(self.plan, self.program.name, tiled)
 
-    def _exec(self, stmts, env):
-        low = self._low
-        for st in stmts:
-            if isinstance(st, BulkUpdate):
-                env[st.dest] = low.lower_update(st, env)
-            elif isinstance(st, BulkStore):
-                env[st.dest] = low.lower_store(st, env)
-            elif isinstance(st, ScalarAgg):
-                env[st.dest] = low.lower_scalar_agg(st, env)
-            elif isinstance(st, ScalarAssign):
-                env[st.dest] = low.lower_scalar_assign(st, env)
-            elif isinstance(st, SeqWhile):
-                carry_names = self._mutated(st.body)
-                carry0 = tuple(jnp.asarray(env[n]) for n in carry_names)
+    # -- public execution interface (distributed.py consumes this) --
+    def execute(self, env: dict, *, bag_offsets=None, bag_limits=None,
+                nodes=None) -> None:
+        ctx = ExecContext(bag_offsets or {}, bag_limits or {})
+        self.executor.execute(self.plan if nodes is None else nodes, env, ctx)
 
-                def cond_fn(c, _names=carry_names, _st=st):
-                    e2 = dict(env)
-                    e2.update(dict(zip(_names, c)))
-                    return jnp.asarray(
-                        low.eval(_st.cond, e2, Axes(), {}, []), bool)
-
-                def body_fn(c, _names=carry_names, _st=st):
-                    e2 = dict(env)
-                    e2.update(dict(zip(_names, c)))
-                    self._exec(_st.body, e2)
-                    return tuple(jnp.asarray(e2[n]) for n in _names)
-
-                out = jax.lax.while_loop(cond_fn, body_fn, carry0)
-                env.update(dict(zip(carry_names, out)))
-            else:
-                raise RejectionError(f"cannot execute {st}")
-
-    def run(self, inputs: dict) -> dict:
+    def prepare_env(self, inputs: dict) -> dict:
         env = {}
         for name, t in self.program.params.items():
             v = inputs[name]
@@ -623,7 +620,11 @@ class CompiledProgram:
                         v, jnp.float32 if t.dtype == "float" else jnp.int32)
             else:
                 env[name] = jnp.asarray(v)
-        self._exec(self.target, env)
+        return env
+
+    def run(self, inputs: dict) -> dict:
+        env = self.prepare_env(inputs)
+        self.execute(env)
         return {n: env[n] for n in self.program.outputs}
 
     def __call__(self, **inputs):
@@ -634,9 +635,9 @@ def compile_program(fn_or_prog, *, restrictions=True,
                     optimize_contractions=True,
                     use_kernels=False) -> CompiledProgram:
     """Front door: loop program → restrictions check (Def. 3.1) →
-    comprehension translation (Fig. 2) → compiled JAX executable.
-    use_kernels=True routes +-group-bys through the Pallas one-hot-MXU
-    segment kernel (interpret-mode off-TPU)."""
+    comprehension translation (Fig. 2) → pass pipeline (passes.py) →
+    executable physical plan.  use_kernels=True routes +-group-bys through
+    the Pallas one-hot-MXU segment kernel (interpret-mode off-TPU)."""
     prog = fn_or_prog if isinstance(fn_or_prog, Program) \
         else fn_or_prog.program
     if restrictions:

@@ -1,0 +1,548 @@
+"""Optimizer pass pipeline: target comprehensions → physical plan.
+
+Every *recognition* decision the compiler makes lives here, as an ordered
+sequence of passes over plan nodes (lower.py only materializes the chosen
+operators, with runtime extent/representation guards).  The ordering is a
+contract (see DESIGN.md):
+
+  1. iteration-spaces           comprehension qualifiers → IterSpace; every
+                                statement gets its naive physical operator
+                                (the paper-faithful plan)
+  2. identity-traversal         Get reads whose indices are distinct
+                                generator-axis vars → broadcast-eligible
+                                Gather (no gather when extents cover)
+  3. axis-key-classification    group-by keys that are pure axis vars →
+                                AxisReduce (Rule 17 generalized); constant
+                                keys → ScalarReduce at a point (Rule 16)
+  4. einsum-recognition         +-AxisReduce of a product of gathers (or a
+                                ±-sum of products) → EinsumContract
+                                (beyond-paper MXU contraction)
+  5. tiled-fusion               matmul-shaped EinsumContract → TiledMatmul
+                                (§5: block-sparse Pallas kernel on packed
+                                lhs, no unpack)
+  6. dead-store-elimination     a store fully overwritten by a later
+                                equal-coverage unconditional store, with no
+                                intervening reader, is dropped
+  7. update-fusion              consecutive reductions sharing an iteration
+                                space and touching disjoint state → Fused
+                                (one distributed collective round)
+
+Passes 2-5 must run in this order: classification consumes rewritten reads,
+einsum consumes AxisReduce nodes, tiled-fusion consumes EinsumContract
+nodes.  Passes 6-7 are cleanups over the final operator choice and must run
+last (fusion would otherwise hide stores from the deadness scan).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from . import plan as P
+from .comprehension import (BagGen, BulkStore, BulkUpdate, Cond, Get,
+                            RangeGen, ScalarAgg, ScalarAssign, SeqWhile)
+from .loop_ast import (BinOp, Call, Const, Index, Program, RejectionError,
+                       UnOp, Var)
+
+
+@dataclass(frozen=True)
+class PlanConfig:
+    optimize_contractions: bool = True   # False = paper-faithful plans
+    use_kernels: bool = False            # +-group-bys via Pallas segment kernel
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _space_of(quals) -> P.IterSpace:
+    axes, conds = [], []
+    for q in quals:
+        if isinstance(q, RangeGen):
+            axes.append(P.AxisSpec("range", q.var, lo=q.lo, hi=q.hi))
+        elif isinstance(q, BagGen):
+            axes.append(P.AxisSpec("bag", q.idx, bag=q.bag, vals=q.vals))
+        else:
+            conds.append(q.e)
+    return P.IterSpace(tuple(axes), tuple(conds))
+
+
+def _expr_names(e, acc: set):
+    if isinstance(e, (Get, P.Gather, Index)):
+        acc.add(e.array)
+        for i in e.idxs:
+            _expr_names(i, acc)
+    elif isinstance(e, Var):
+        acc.add(e.name)
+    elif isinstance(e, BinOp):
+        _expr_names(e.lhs, acc)
+        _expr_names(e.rhs, acc)
+    elif isinstance(e, UnOp):
+        _expr_names(e.e, acc)
+    elif isinstance(e, Call):
+        for a in e.args:
+            _expr_names(a, acc)
+
+
+def _refs_of(st, prog: Program) -> frozenset:
+    """Env names a statement reads (params/outputs only; loop vars shadow)."""
+    names: set = set()
+    bound: set = set()
+    for q in getattr(st, "quals", []):
+        if isinstance(q, BagGen):
+            names.add(q.bag)
+            bound |= set(q.vals) | {q.idx}
+        elif isinstance(q, RangeGen):
+            _expr_names(q.lo, names)
+            _expr_names(q.hi, names)
+            bound.add(q.var)
+        else:
+            _expr_names(q.e, names)
+    if hasattr(st, "value"):
+        _expr_names(st.value, names)
+    for k in getattr(st, "keys", ()):
+        _expr_names(k, names)
+    names -= bound
+    return frozenset(n for n in names
+                     if n in prog.params or n in prog.outputs)
+
+
+def _axis_keys(keys, space: P.IterSpace):
+    """Keys that are distinct pure generator-axis vars, else None."""
+    axis_vars = set(space.axis_vars)
+    names = []
+    for k in keys:
+        if isinstance(k, Var) and k.name in axis_vars:
+            names.append(k.name)
+        else:
+            return None
+    return names if len(set(names)) == len(names) else None
+
+
+def _var_axis_map(space: P.IterSpace) -> dict:
+    """var → axis name, for axis vars and bag value-column vars."""
+    m = {}
+    for a in space.axes:
+        m[a.var] = a.var
+        for v in a.vals:
+            m[v] = a.var
+    return m
+
+
+def _axes_used(e, space: P.IterSpace) -> set:
+    va = _var_axis_map(space)
+    used: set = set()
+
+    def go(x):
+        if isinstance(x, Var):
+            if x.name in va:
+                used.add(va[x.name])
+        elif isinstance(x, (Get, P.Gather)):
+            for i in x.idxs:
+                go(i)
+        elif isinstance(x, BinOp):
+            go(x.lhs)
+            go(x.rhs)
+        elif isinstance(x, UnOp):
+            go(x.e)
+        elif isinstance(x, Call):
+            for a in x.args:
+                go(a)
+    go(e)
+    return used
+
+
+def _transform_blocks(nodes: list, block_fn) -> list:
+    """Apply a statement-block transform to the top level and every SeqLoop
+    body (fusion/deadness never cross a sequential-loop boundary)."""
+    out = block_fn(nodes)
+    for n in out:
+        if isinstance(n, P.SeqLoop):
+            n.body = _transform_blocks(n.body, block_fn)
+    return out
+
+
+def _map_nodes(nodes: list, node_fn) -> list:
+    out = []
+    for n in nodes:
+        if isinstance(n, P.SeqLoop):
+            n.body = _map_nodes(n.body, node_fn)
+            out.append(node_fn(n))
+        else:
+            out.append(node_fn(n))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass 1: iteration-space construction (naive / paper-faithful operators)
+# ---------------------------------------------------------------------------
+
+def build_spaces(target: list, prog: Program) -> list:
+    nodes = []
+    for st in target:
+        if isinstance(st, BulkUpdate):
+            nodes.append(P.SegmentReduce(
+                st, _space_of(st.quals), _refs_of(st, prog),
+                st.dest, tuple(st.keys), st.op, st.value))
+        elif isinstance(st, BulkStore):
+            nodes.append(P.Scatter(
+                st, _space_of(st.quals), _refs_of(st, prog),
+                st.dest, tuple(st.keys), st.value))
+        elif isinstance(st, ScalarAgg):
+            nodes.append(P.ScalarReduce(
+                st, _space_of(st.quals), _refs_of(st, prog),
+                st.dest, st.op, st.value))
+        elif isinstance(st, ScalarAssign):
+            nodes.append(P.MapExpr(
+                st, _space_of(st.quals), _refs_of(st, prog),
+                st.dest, st.value, key_axes=None))
+        elif isinstance(st, SeqWhile):
+            body = build_spaces(st.body, prog)
+            carry: list = []
+            for b in body:
+                for d in P.dests_of(b):
+                    if d not in carry:
+                        carry.append(d)
+            reads: set = set()
+            _expr_names(st.cond, reads)
+            reads = {n for n in reads if n in prog.params or n in prog.outputs}
+            for b in body:
+                reads |= b.reads
+            nodes.append(P.SeqLoop(st, P.IterSpace(()), frozenset(reads),
+                                   st.cond, body, tuple(carry)))
+        else:
+            raise RejectionError(f"cannot plan statement {st}")
+    return nodes
+
+
+# ---------------------------------------------------------------------------
+# pass 2: identity-traversal elimination (physical reads)
+# ---------------------------------------------------------------------------
+
+def _rewrite_reads(e, axis_vars: frozenset):
+    if isinstance(e, (Get, P.Gather)):
+        idxs = tuple(_rewrite_reads(i, axis_vars) for i in e.idxs)
+        names = [i.name for i in idxs if isinstance(i, Var)]
+        ok = (len(names) == len(idxs) and len(set(names)) == len(names)
+              and all(n in axis_vars for n in names))
+        return P.Gather(e.array, idxs, broadcast_ok=ok)
+    if isinstance(e, BinOp):
+        return BinOp(e.op, _rewrite_reads(e.lhs, axis_vars),
+                     _rewrite_reads(e.rhs, axis_vars))
+    if isinstance(e, UnOp):
+        return UnOp(e.op, _rewrite_reads(e.e, axis_vars))
+    if isinstance(e, Call):
+        return Call(e.fn, tuple(_rewrite_reads(a, axis_vars) for a in e.args))
+    return e
+
+
+def pass_identity_traversal(nodes: list, prog, config) -> list:
+    def fix(n):
+        av = frozenset(n.space.axis_vars)
+        n.space = P.IterSpace(
+            n.space.axes, tuple(_rewrite_reads(c, av) for c in n.space.conds))
+        if hasattr(n, "value"):
+            n.value = _rewrite_reads(n.value, av)
+        if hasattr(n, "keys"):
+            n.keys = tuple(_rewrite_reads(k, av) for k in n.keys)
+        if isinstance(n, P.SeqLoop):
+            n.cond = _rewrite_reads(n.cond, frozenset())
+        return n
+    return _map_nodes(nodes, fix)
+
+
+# ---------------------------------------------------------------------------
+# pass 3: axis-key classification (Rules 16/17)
+# ---------------------------------------------------------------------------
+
+def _bool_any(node: P.ScalarReduce):
+    """max/min over float(bool) lowers to any/all — record the peephole."""
+    v = node.value
+    if node.op in ("max", "min") and isinstance(v, Call) and \
+            v.fn == "float" and not node.space.conds:
+        return v.args[0]
+    return None
+
+
+def pass_classify_keys(nodes: list, prog, config) -> list:
+    def fix(n):
+        if isinstance(n, P.SegmentReduce):
+            if n.keys and all(isinstance(k, Const) for k in n.keys):
+                sr = P.ScalarReduce(n.stmt, n.space, n.reads, n.dest, n.op,
+                                    n.value,
+                                    point=tuple(int(k.value) for k in n.keys))
+                sr.bool_any = _bool_any(sr)
+                return sr
+            ka = _axis_keys(n.keys, n.space)
+            if ka is not None:
+                return P.AxisReduce(n.stmt, n.space, n.reads, n.dest,
+                                    tuple(ka), n.op, n.value)
+            if config.use_kernels and n.op == "+":
+                n.backend = "pallas"
+            return n
+        if isinstance(n, P.Scatter):
+            ka = _axis_keys(n.keys, n.space)
+            if ka is not None and set(ka) == set(n.space.axis_vars):
+                return P.MapExpr(n.stmt, n.space, n.reads, n.dest, n.value,
+                                 key_axes=tuple(ka))
+            return n
+        if isinstance(n, P.ScalarReduce):
+            n.bool_any = _bool_any(n)
+        return n
+    return _map_nodes(nodes, fix)
+
+
+# ---------------------------------------------------------------------------
+# pass 4: einsum recognition (beyond-paper contraction)
+# ---------------------------------------------------------------------------
+
+def _product_factors(value, space: P.IterSpace, key_axes, contracted):
+    """Static half of the contraction recognizer: value must be a product of
+    axis-indexed gathers times axis-free scalars covering all axes."""
+    axis_vars = set(space.axis_vars)
+    bagvals = set(space.bagval_vars)
+    factors: list = []
+    others: list = []
+
+    def flatten(e):
+        if isinstance(e, BinOp) and e.op == "*":
+            flatten(e.lhs)
+            flatten(e.rhs)
+        elif isinstance(e, P.Gather):
+            factors.append(e)
+        else:
+            others.append(e)
+    flatten(value)
+    if not factors:
+        return None
+    factor_axes = []
+    for f in factors:
+        axs = []
+        for ix in f.idxs:
+            if not (isinstance(ix, Var) and ix.name in axis_vars):
+                return None
+            axs.append(ix.name)
+        factor_axes.append(tuple(axs))
+    for o in others:
+        if isinstance(o, Const):
+            continue
+        if isinstance(o, Var) and o.name not in axis_vars \
+                and o.name not in bagvals:
+            continue
+        return None
+    used = {a for axs in factor_axes for a in axs}
+    if not set(key_axes) <= used or not set(contracted) <= used:
+        return None
+    return P.EinsumFactors(tuple(factors), tuple(factor_axes), tuple(others))
+
+
+def _term_split(node: P.AxisReduce, contracted):
+    """value = s1*s2*(±Σ terms): axis-free scalar factors stripped, each
+    product term einsum-recognized (terms free of the contracted axes reduce
+    to extent-product × term at runtime)."""
+    scalars: list = []
+    value = node.value
+    while isinstance(value, BinOp) and value.op == "*":
+        if not _axes_used(value.lhs, node.space):
+            scalars.append(value.lhs)
+            value = value.rhs
+        elif not _axes_used(value.rhs, node.space):
+            scalars.append(value.rhs)
+            value = value.lhs
+        else:
+            break
+    terms: list = []
+
+    def split(e, sign):
+        if isinstance(e, BinOp) and e.op in ("+", "-"):
+            split(e.lhs, sign)
+            split(e.rhs, sign if e.op == "+" else -sign)
+        elif isinstance(e, UnOp) and e.op == "neg":
+            split(e.e, -sign)
+        else:
+            terms.append((sign, e))
+    split(value, 1)
+    if len(terms) < 2:
+        return None
+    entries = []
+    for sign, term in terms:
+        if not (_axes_used(term, node.space) & set(contracted)):
+            entries.append((sign, term, None))       # contraction-free term
+        else:
+            ef = _product_factors(term, node.space, node.key_axes, contracted)
+            if ef is None:
+                return None
+            entries.append((sign, term, ef))
+    return tuple(scalars), tuple(entries)
+
+
+def pass_einsum(nodes: list, prog, config) -> list:
+    if not config.optimize_contractions:
+        return nodes
+
+    def fix(n):
+        if not isinstance(n, P.AxisReduce) or n.op != "+" or n.space.conds:
+            return n
+        contracted = n.contracted
+        if not contracted:
+            return n
+        ef = _product_factors(n.value, n.space, n.key_axes, contracted)
+        if ef is not None:
+            return P.EinsumContract(n.stmt, n.space, n.reads, n.dest,
+                                    n.key_axes, product=ef, fallback=n)
+        ts = _term_split(n, contracted)
+        if ts is not None:
+            scalars, entries = ts
+            return P.EinsumContract(n.stmt, n.space, n.reads, n.dest,
+                                    n.key_axes, scalars=scalars,
+                                    terms=entries, fallback=n)
+        return n
+    return _map_nodes(nodes, fix)
+
+
+# ---------------------------------------------------------------------------
+# pass 5: §5 tiled-matmul fusion
+# ---------------------------------------------------------------------------
+
+def pass_tiled_fusion(nodes: list, prog, config) -> list:
+    if not config.optimize_contractions:
+        return nodes
+
+    def fix(n):
+        if not (isinstance(n, P.EinsumContract) and n.product is not None):
+            return n
+        fa = n.product.factor_axes
+        if len(fa) == 2 and len(fa[0]) == 2 and len(fa[1]) == 2 \
+                and fa[0][1] == fa[1][0] \
+                and tuple(n.key_axes) == (fa[0][0], fa[1][1]):
+            return P.TiledMatmul(n.stmt, n.space, n.reads, n.dest, contract=n)
+        return n
+    return _map_nodes(nodes, fix)
+
+
+# ---------------------------------------------------------------------------
+# pass 6: dead-store elimination
+# ---------------------------------------------------------------------------
+
+def _reads_name(node, name: str) -> bool:
+    if name in node.reads:
+        return True
+    # reduce-type nodes implicitly read-modify-write their destinations
+    if P.is_reduce(node) and name in P.dests_of(node):
+        return True
+    return isinstance(node, P.SeqLoop) and name in P.dests_of(node)
+
+
+def _pure_store(n) -> bool:
+    return isinstance(n, (P.MapExpr, P.Scatter))
+
+
+def _has_gather(e) -> bool:
+    if isinstance(e, (Get, P.Gather)):
+        return True
+    if isinstance(e, BinOp):
+        return _has_gather(e.lhs) or _has_gather(e.rhs)
+    if isinstance(e, UnOp):
+        return _has_gather(e.e)
+    if isinstance(e, Call):
+        return any(_has_gather(a) for a in e.args)
+    return False
+
+
+def _same_coverage(killer, victim) -> bool:
+    """killer unconditionally writes at least every key victim writes.
+    The killer's VALUE must be gather-free: a gather whose index lands out
+    of range drops that row at runtime (empty-bag semantics), so a store
+    with gathers in its value may write fewer cells than the victim did."""
+    if type(killer) is not type(victim) or killer.dest != victim.dest:
+        return False
+    if killer.space.axes != victim.space.axes or killer.space.conds:
+        return False
+    if _has_gather(killer.value):
+        return False
+    if isinstance(killer, P.MapExpr):
+        return killer.key_axes == victim.key_axes
+    return killer.keys == victim.keys
+
+
+def pass_dead_stores(nodes: list, prog, config) -> list:
+    def block(b):
+        keep = []
+        for i, n in enumerate(b):
+            dead = False
+            if _pure_store(n):
+                for k in b[i + 1:]:
+                    if _reads_name(k, n.dest):
+                        break
+                    if isinstance(k, P.SeqLoop):
+                        break               # conservative: opaque region
+                    if _pure_store(k) and _same_coverage(k, n):
+                        dead = True
+                        break
+            if not dead:
+                keep.append(n)
+        return keep
+    return _transform_blocks(nodes, block)
+
+
+# ---------------------------------------------------------------------------
+# pass 7: cross-statement update fusion
+# ---------------------------------------------------------------------------
+
+_FUSABLE = (P.SegmentReduce, P.AxisReduce, P.ScalarReduce)
+
+
+def pass_fuse_updates(nodes: list, prog, config) -> list:
+    def block(b):
+        out: list = []
+        i = 0
+        while i < len(b):
+            n = b[i]
+            if not isinstance(n, _FUSABLE):
+                out.append(n)
+                i += 1
+                continue
+            group = [n]
+            dests = {n.dest}
+            reads = set(n.reads)
+            j = i + 1
+            while j < len(b):
+                m = b[j]
+                if not isinstance(m, _FUSABLE) or m.space != n.space:
+                    break
+                if m.dest in dests or m.dest in reads or (set(m.reads) & dests):
+                    break
+                group.append(m)
+                dests.add(m.dest)
+                reads |= m.reads
+                j += 1
+            if len(group) >= 2:
+                out.append(P.Fused(None, n.space,
+                                   frozenset(reads - dests), parts=group))
+                i = j
+            else:
+                out.append(n)
+                i += 1
+        return out
+    return _transform_blocks(nodes, block)
+
+
+# ---------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------
+
+PIPELINE = (
+    ("identity-traversal", pass_identity_traversal),
+    ("axis-key-classification", pass_classify_keys),
+    ("einsum-recognition", pass_einsum),
+    ("tiled-fusion", pass_tiled_fusion),
+    ("dead-store-elimination", pass_dead_stores),
+    ("update-fusion", pass_fuse_updates),
+)
+
+
+def plan_program(target: list, prog: Program,
+                 config: PlanConfig = PlanConfig()) -> list:
+    """Run the full pipeline: target comprehensions → physical plan."""
+    nodes = build_spaces(target, prog)
+    for _name, fn in PIPELINE:
+        nodes = fn(nodes, prog, config)
+    return nodes

@@ -1,0 +1,366 @@
+"""Physical-plan IR — the artifact between translation and execution.
+
+The translator (translate.py) produces target *comprehensions* (paper Fig. 2);
+the pass pipeline (passes.py) turns each comprehension into one of the
+physical operators below; the executor (lower.py) materializes the chosen
+operator in JAX; distributed.py maps the same nodes onto a device mesh.
+Nothing downstream of passes.py re-derives a plan decision — recognition
+happens once, here, and every backend consumes the same plan.
+
+Operator catalogue (paper rule in brackets):
+
+  MapExpr         elementwise store over the iteration space  [15b, axis keys]
+  Scatter         store at computed affine keys (.at[].set, drop)       [15b]
+  SegmentReduce   group-by on computed keys → scatter-⊕ / Pallas kernel [15a]
+  AxisReduce      group-by on pure axis keys → ⊕-reduce over the
+                  contracted axes, no shuffle            [Rule 17 generalized]
+  EinsumContract  +-reduction of a product of gathers → MXU contraction
+                  (beyond-paper; falls back to AxisReduce at runtime)
+  TiledMatmul     matmul-shaped EinsumContract on a §5 packed lhs →
+                  block-sparse Pallas tile_matmul, no unpack
+  ScalarReduce    total aggregation into a scalar / fixed cell  [Rule 16]
+  SeqLoop         sequential while over the mutated-variable carry   [15f]
+  Fused           consecutive reductions sharing one iteration space,
+                  merged so distributed execution runs one collective round
+
+Expression trees inside nodes contain `Gather` — the physical read operator
+(clipped gather + inRange mask); `broadcast_ok` marks reads the
+identity-traversal pass proved to be whole-array traversals, which the
+executor turns into a broadcast instead of a gather when extents line up.
+
+Runtime guards: extents and input representations (packed vs dense) are only
+known at run(); optimistic nodes (EinsumContract, TiledMatmul) therefore
+carry a `fallback` chain the executor walks when a guard fails.  A fallback
+never changes results, only the operator used.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from .comprehension import pretty
+from .loop_ast import Expr
+
+
+# ---------------------------------------------------------------------------
+# physical read
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Gather(Expr):
+    """Physical array read: gather with clipped indices + inRange mask.
+    `broadcast_ok` = indices are distinct generator-axis vars, so when the
+    runtime extents cover the array this is the array itself, broadcast."""
+    array: str
+    idxs: tuple[Expr, ...]
+    broadcast_ok: bool = False
+
+
+# ---------------------------------------------------------------------------
+# iteration space
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AxisSpec:
+    kind: str                    # "range" | "bag"
+    var: str                     # the axis variable (loop index)
+    lo: Optional[Expr] = None    # range bounds (None for bag axes)
+    hi: Optional[Expr] = None
+    bag: Optional[str] = None    # bag name (bag axes)
+    vals: tuple[str, ...] = ()   # bag value-column variables
+
+
+@dataclass(frozen=True)
+class IterSpace:
+    axes: tuple[AxisSpec, ...]
+    conds: tuple[Expr, ...] = ()
+
+    @property
+    def axis_vars(self) -> tuple[str, ...]:
+        return tuple(a.var for a in self.axes)
+
+    @property
+    def bag_names(self) -> tuple[str, ...]:
+        return tuple(a.bag for a in self.axes if a.kind == "bag")
+
+    @property
+    def has_bag(self) -> bool:
+        return any(a.kind == "bag" for a in self.axes)
+
+    @property
+    def bagval_vars(self) -> tuple[str, ...]:
+        return tuple(v for a in self.axes for v in a.vals)
+
+    def pretty(self) -> str:
+        return "×".join(self.axis_vars) if self.axes else "·"
+
+
+# ---------------------------------------------------------------------------
+# static einsum description
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EinsumFactors:
+    """A +-product of gathers: factors[i] is indexed purely by generator-axis
+    vars (factor_axes[i]); `others` are residual axis-free scalar factors."""
+    factors: tuple[Gather, ...]
+    factor_axes: tuple[tuple[str, ...], ...]
+    others: tuple[Expr, ...] = ()
+
+    def spec(self, key_axes) -> str:
+        ins = ",".join("".join(a) for a in self.factor_axes)
+        return ins + "->" + "".join(key_axes)
+
+
+# ---------------------------------------------------------------------------
+# plan nodes
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MapExpr:
+    """Elementwise store: dest[key_axes] := value over the space (key_axes
+    None = scalar assignment guarded by the space's conds)."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    dest: str
+    value: Expr
+    key_axes: Optional[tuple[str, ...]] = None
+
+    def describe(self) -> str:
+        if self.key_axes is None:
+            return f"MapExpr(scalar) → {self.dest}"
+        return (f"MapExpr[{self.space.pretty()}] → "
+                f"{self.dest}[{','.join(self.key_axes)}]")
+
+
+@dataclass
+class Scatter:
+    """Store at computed affine keys (restrictions ⇒ no duplicate keys)."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    dest: str
+    keys: tuple[Expr, ...]
+    value: Expr
+
+    def describe(self) -> str:
+        return f"Scatter[{self.space.pretty()}] → {self.dest} (drop OOB)"
+
+
+@dataclass
+class SegmentReduce:
+    """Group-by on computed keys → segment-⊕ into the destination index
+    space (the paper's shuffle, as a scatter-⊕ or the Pallas kernel)."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    dest: str
+    keys: tuple[Expr, ...]
+    op: str
+    value: Expr
+    backend: str = "scatter"     # "scatter" | "pallas"
+
+    def describe(self) -> str:
+        return (f"SegmentReduce({self.op}, backend={self.backend})"
+                f"[{self.space.pretty()}] → {self.dest}")
+
+
+@dataclass
+class AxisReduce:
+    """Group-by on pure axis keys (Rule 17 generalized): ⊕-reduce the
+    contracted axes; elementwise merge when nothing is contracted."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    dest: str
+    key_axes: tuple[str, ...]
+    op: str
+    value: Expr
+
+    @property
+    def contracted(self) -> tuple[str, ...]:
+        ks = set(self.key_axes)
+        return tuple(a for a in self.space.axis_vars if a not in ks)
+
+    def describe(self) -> str:
+        over = ",".join(self.contracted) or "·"
+        return f"AxisReduce({self.op} over {over}) → {self.dest}[{','.join(self.key_axes)}]"
+
+
+@dataclass
+class EinsumContract:
+    """+-contraction of a product of gathers (or a ±-sum of such products in
+    `terms` mode) lowered to jnp.einsum.  Falls back to `fallback` when a
+    runtime extent guard fails."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    dest: str
+    key_axes: tuple[str, ...]
+    product: Optional[EinsumFactors] = None
+    scalars: tuple[Expr, ...] = ()        # axis-free factors (terms mode)
+    terms: Optional[tuple] = None         # ((sign, Expr, EinsumFactors|None), ...)
+    fallback: Optional[AxisReduce] = None
+
+    @property
+    def op(self) -> str:
+        return "+"      # einsum recognition only fires on +-reductions
+
+    @property
+    def contracted(self) -> tuple[str, ...]:
+        ks = set(self.key_axes)
+        return tuple(a for a in self.space.axis_vars if a not in ks)
+
+    def describe(self) -> str:
+        if self.product is not None:
+            ops = ",".join(f.array for f in self.product.factors)
+            return (f"EinsumContract('{self.product.spec(self.key_axes)}'; "
+                    f"{ops}) → {self.dest}")
+        return (f"EinsumContract(term-split, {len(self.terms or ())} terms "
+                f"over {','.join(self.contracted)}) → {self.dest}")
+
+
+@dataclass
+class TiledMatmul:
+    """§5 packed-array fusion: a matmul-shaped contraction whose lhs arrives
+    as a TiledMatrix runs the block-sparse Pallas tile_matmul directly on
+    the tiles (no unpack).  Dense lhs at runtime → `contract`."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    dest: str
+    contract: EinsumContract
+
+    @property
+    def op(self) -> str:
+        return "+"
+
+    @property
+    def lhs(self) -> str:
+        return self.contract.product.factors[0].array
+
+    @property
+    def rhs(self) -> str:
+        return self.contract.product.factors[1].array
+
+    def describe(self) -> str:
+        return (f"TiledMatmul(pallas tile_matmul on packed {self.lhs}, "
+                f"rhs {self.rhs}) → {self.dest}")
+
+
+@dataclass
+class ScalarReduce:
+    """Rule 16: total ⊕-aggregation into a scalar, or into one fixed cell
+    (`point`) for constant group-by keys."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    dest: str
+    op: str
+    value: Expr
+    point: Optional[tuple[int, ...]] = None
+    bool_any: Optional[Expr] = None  # peephole: max/min of float(bool) → any/all
+
+    def describe(self) -> str:
+        tgt = self.dest if self.point is None else \
+            f"{self.dest}[{','.join(map(str, self.point))}]"
+        return f"ScalarReduce({self.op})[{self.space.pretty()}] → {tgt}"
+
+
+@dataclass
+class SeqLoop:
+    """lax.while_loop over the carry of body-mutated variables."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    cond: Expr
+    body: list = field(default_factory=list)
+    carry: tuple[str, ...] = ()
+
+    def describe(self) -> str:
+        return f"SeqLoop(carry={','.join(self.carry)})"
+
+
+@dataclass
+class Fused:
+    """Cross-statement fusion: consecutive reductions over one iteration
+    space with disjoint destinations; distributed mode runs them as a single
+    shard_map round."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    parts: list = field(default_factory=list)
+
+    def describe(self) -> str:
+        return f"Fused[{self.space.pretty()}] {{{len(self.parts)} updates}}"
+
+
+PlanNode = Any
+
+REDUCE_NODES = (SegmentReduce, AxisReduce, EinsumContract, TiledMatmul,
+                ScalarReduce)
+
+
+def dests_of(node: PlanNode) -> tuple[str, ...]:
+    if isinstance(node, Fused):
+        return tuple(p.dest for p in node.parts)
+    if isinstance(node, SeqLoop):
+        return node.carry
+    return (node.dest,)
+
+
+def ops_of(node: PlanNode) -> tuple[str, ...]:
+    """⊕ monoid per destination (reduce-type nodes only)."""
+    if isinstance(node, Fused):
+        return tuple(p.op for p in node.parts)
+    return (node.op,)
+
+
+def is_reduce(node: PlanNode) -> bool:
+    return isinstance(node, REDUCE_NODES) or (
+        isinstance(node, Fused)
+        and all(isinstance(p, REDUCE_NODES) for p in node.parts))
+
+
+# ---------------------------------------------------------------------------
+# plan pretty-printer (Spark-EXPLAIN-style)
+# ---------------------------------------------------------------------------
+
+def _node_lines(node: PlanNode, indent: int, tiled, out: list):
+    pre = "  " * indent
+    if isinstance(node, SeqLoop):
+        out.append(f"{pre}{node.describe()}")
+        for b in node.body:
+            _node_lines(b, indent + 1, tiled, out)
+        return
+    if isinstance(node, Fused):
+        out.append(f"{pre}{node.describe()}")
+        for p in node.parts:
+            _node_lines(p, indent + 1, tiled, out)
+        return
+    if isinstance(node, TiledMatmul) and node.lhs not in tiled:
+        # resolve the runtime representation guard for display
+        _node_lines(node.contract, indent, tiled, out)
+        return
+    line = f"{pre}{node.describe()}"
+    if isinstance(node, EinsumContract) and node.fallback is not None:
+        line += f"  [fallback: {node.fallback.describe()}]"
+    if isinstance(node, TiledMatmul):
+        line += f"  [dense lhs: {node.contract.describe()}]"
+    out.append(line)
+    if node.stmt is not None:
+        out.append(f"{pre}    {pretty(node.stmt)}")
+
+
+def explain(plan: list, name: str = "", tiled=()) -> str:
+    """Pretty-print the chosen physical operator per statement.  `tiled`
+    names parameters assumed to arrive as §5 packed TiledMatrix inputs,
+    resolving the TiledMatmul-vs-einsum runtime guard for display."""
+    out = [f"== physical plan{': ' + name if name else ''} =="]
+    for i, node in enumerate(plan):
+        sub: list = []
+        _node_lines(node, 0, frozenset(tiled), sub)
+        out.append(f"[{i}] {sub[0]}")
+        out.extend("    " + s for s in sub[1:])
+    return "\n".join(out)

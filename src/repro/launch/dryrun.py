@@ -109,6 +109,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
                   "output_size_in_bytes", "generated_code_size_in_bytes"):
             mem_rec[f] = getattr(mem, f, None)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: list with one dict
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     stats = hlo_analysis.analyze(hlo)
     roof = roofline.roofline(stats, model, shp, n_chips)

@@ -160,6 +160,8 @@ def _operand_bytes(comp: Comp, op: Op) -> int:
 def _dot_flops(comp: Comp, op: Op) -> float:
     out = _shape_elems(op.out_type)
     lhs_t = comp.sym.get(op.operands[0], "") if op.operands else ""
+    if not lhs_t and op.operands and "[" in op.operands[0]:
+        lhs_t = op.operands[0]       # inline-typed operand (older HLO text)
     m = _SHAPE_RE.search(lhs_t)
     contract = 1
     if m:

@@ -110,7 +110,8 @@ def tree_pspecs(defs, axis_sizes):
 
 
 def tree_init(defs, seed: int):
-    leaves, treedef = jax.tree.flatten_with_path(defs, is_leaf=is_def)
+    from ..compat import tree_flatten_with_path
+    leaves, treedef = tree_flatten_with_path(defs, is_leaf=is_def)
     out = []
     base = jax.random.PRNGKey(seed)
     for path, d in leaves:

@@ -1,6 +1,9 @@
 """Property tests for the attention building blocks."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.launch import hlo_analysis

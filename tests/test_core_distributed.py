@@ -37,6 +37,14 @@ cases = {
   "matrix_multiplication": dict(M=rng.standard_normal((16, 8)),
                                 N=rng.standard_normal((8, 12)),
                                 R=np.zeros((16, 12)), n=16, m=12, l=8),
+  # bag generator x dim-bounded range in one reduction: dims must reach
+  # the shard_map body as static python ints, not traced operands
+  "kmeans_step": dict(P=(rng.standard_normal(24) * 3,
+                         rng.standard_normal(24) * 3),
+                      CX=rng.standard_normal(4), CY=rng.standard_normal(4),
+                      K=4, D=np.zeros((24, 4)), MinD=np.full(24, 1e30),
+                      Cl=np.zeros(24), SX=np.zeros(4), SY=np.zeros(4),
+                      CN=np.zeros(4), NX=np.zeros(4), NY=np.zeros(4)),
 }
 for name, ins in cases.items():
     fn = ALL[name]
@@ -58,3 +66,106 @@ def test_distributed_equals_single_device():
                        text=True, cwd=_ROOT, timeout=900)
     assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
     assert "DIST_OK" in r.stdout
+
+
+_ODD_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np
+from jax.sharding import PartitionSpec
+from repro.core import compile_program
+from repro.core.distributed import compile_distributed
+from repro.core.programs import ALL
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((8,), ("data",))
+rng = np.random.default_rng(11)
+nv = 16
+n = 65                      # NOT divisible by 8: pads to 72, masks 7 rows
+cases = {
+  "word_count": dict(W=rng.integers(0, nv, n).astype(np.float64),
+                     C=np.zeros(nv)),
+  "group_by": dict(S=(rng.integers(0, nv, n).astype(np.float64),
+                      rng.standard_normal(n)), C=np.zeros(nv)),
+  "conditional_sum": dict(V=rng.standard_normal(n), s=0.0, limit=0.3),
+}
+for name, ins in cases.items():
+    fn = ALL[name]
+    single = compile_program(fn).run(ins)
+    for mode in ("shardmap", "gspmd"):
+        dp = compile_distributed(fn, mesh, ("data",), mode=mode)
+        # odd-length bags must SHARD (padded), not silently replicate
+        placed, limits = dp.place(ins)
+        bag = next(k for k, t in fn.program.params.items()
+                   if t.kind == "bag")
+        assert limits[bag] == n, (name, limits)
+        col = placed[bag][0]
+        assert col.shape[0] == 72
+        assert col.sharding.spec == PartitionSpec(("data",)), \
+            (name, col.sharding.spec)
+        dist = dp.run(ins)
+        for k in single:
+            a = np.asarray(dist[k], np.float64)
+            b = np.asarray(single[k], np.float64)
+            err = np.max(np.abs(a - b) / (np.abs(b) + 1.0))
+            assert err < 1e-4, (name, mode, k, err)
+print("ODD_OK")
+"""
+
+
+@pytest.mark.slow
+def test_odd_length_bag_pads_and_shards():
+    r = subprocess.run([sys.executable, "-c", _ODD_CODE],
+                       capture_output=True, text=True, cwd=_ROOT,
+                       timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "ODD_OK" in r.stdout
+
+
+_EINSUM_BAG_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np
+from repro.core import compile_program, loop_program, bag, matrix, vector, dim
+from repro.core.distributed import compile_distributed
+from repro.core.plan import EinsumContract
+from repro.launch.mesh import make_test_mesh
+
+
+@loop_program
+def col_sums(B: bag[1], M: matrix, R: vector, m: dim):
+    # +-product of gathers contracting the BAG axis: plans as an
+    # EinsumContract whose shardmap execution must fall back to the
+    # masked AxisReduce inside each shard (traced bag offsets)
+    for i, w in items(B):
+        for j in range(0, m):
+            R[j] += M[i, j]
+
+
+cp = compile_program(col_sums)
+assert any(isinstance(x, EinsumContract) for x in cp.plan), cp.explain()
+rng = np.random.default_rng(13)
+nb, m = 24, 5
+ins = dict(B=rng.standard_normal(nb), M=rng.standard_normal((nb, m)),
+           R=np.zeros(m), m=m)
+single = cp.run(ins)
+mesh = make_test_mesh((8,), ("data",))
+for mode in ("shardmap", "gspmd"):
+    dist = compile_distributed(col_sums, mesh, ("data",), mode=mode).run(ins)
+    err = np.max(np.abs(np.asarray(dist["R"], np.float64)
+                        - np.asarray(single["R"], np.float64)))
+    assert err < 1e-4, (mode, err)
+print("EINSUM_BAG_OK")
+"""
+
+
+@pytest.mark.slow
+def test_bag_driven_einsum_distributes(tmp_path):
+    script = tmp_path / "einsum_bag.py"          # @loop_program needs a file
+    script.write_text(_EINSUM_BAG_CODE)
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, cwd=_ROOT, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "EINSUM_BAG_OK" in r.stdout

@@ -2,6 +2,9 @@
 loop programs drawn from a restriction-respecting grammar must compile to
 bulk JAX programs that agree with the sequential interpreter."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import RejectionError, compile_program, interpret
