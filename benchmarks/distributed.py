@@ -1,0 +1,115 @@
+"""Distributed section: shardmap (inferred shardings) vs REP-everything
+replicated execution per program, on a forced-host-device mesh.
+
+Run standalone (forces 8 host devices before importing jax):
+
+  python benchmarks/distributed.py
+
+or as a section of the harness: python -m benchmarks.run --sections dist
+(emits BENCH_distributed.json, uploaded as a CI artifact).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+DEVICES = 8
+
+
+def _force_devices():
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={DEVICES}")
+
+
+def mesh_devices() -> int:
+    """Devices actually used: respects a pre-set XLA_FLAGS (e.g. the CI
+    matrix forcing 4) instead of assuming the default of 8."""
+    import jax
+    return min(DEVICES, len(jax.devices()))
+
+
+def _cases(scale: int):
+    # sized for forced host devices on a CI CPU: the point is placement
+    # coverage (every strategy exercised), not saturating an accelerator
+    import numpy as np
+    rng = np.random.default_rng(23)
+    nv, ne, npts = 128 * scale, 1024 * scale, 512 * scale
+    n, m, l = 32 * scale, 24 * scale, 8
+    return {
+        "word_count": dict(W=rng.integers(0, nv, ne).astype(np.float64),
+                           C=np.zeros(nv)),
+        "group_by": dict(S=(rng.integers(0, nv, ne).astype(np.float64),
+                            rng.standard_normal(ne)), C=np.zeros(nv)),
+        "pagerank": dict(E=(rng.integers(0, nv, ne).astype(np.float64),
+                            rng.integers(0, nv, ne).astype(np.float64)),
+                         P=np.full(nv, 1 / nv), NP=np.zeros(nv),
+                         C=np.zeros(nv), N=nv, num_steps=2.0, steps=0.0,
+                         b=0.85),
+        "kmeans_step": dict(P=(rng.standard_normal(npts) * 3,
+                               rng.standard_normal(npts) * 3),
+                            CX=rng.standard_normal(8),
+                            CY=rng.standard_normal(8), K=8,
+                            D=np.zeros((npts, 8)), MinD=np.full(npts, 1e30),
+                            Cl=np.zeros(npts), SX=np.zeros(8),
+                            SY=np.zeros(8), CN=np.zeros(8), NX=np.zeros(8),
+                            NY=np.zeros(8)),
+        "matrix_factorization_step": dict(
+            R=rng.standard_normal((n, m)),
+            P=rng.standard_normal((n, l)) * 0.1,
+            Q=rng.standard_normal((l, m)) * 0.1,
+            Pp=rng.standard_normal((n, l)) * 0.1,
+            Qp=rng.standard_normal((l, m)) * 0.1,
+            pq=np.zeros((n, m)), err=np.zeros((n, m)),
+            n=n, m=m, l=l, a=0.01, lam=0.1),
+    }
+
+
+def _time(fn, reps=2):
+    import numpy as np
+    for v in fn().values():                # warm-up / compile, synchronized
+        np.asarray(v)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for v in fn().values():
+            np.asarray(v)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def rows(scale: int = 1):
+    """[(name, shardmap_ms, replicated_ms, sharded_arrays)] on a forced
+    host mesh — placement quality, not absolute speed (CPU psum is the
+    bottleneck; the point is that both paths stay correct and the sharded
+    path is exercised end to end)."""
+    _force_devices()
+    from repro.core import compile_program
+    from repro.core.dist_analysis import Dist
+    from repro.core.distributed import compile_distributed
+    from repro.core.programs import ALL
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((mesh_devices(),), ("data",))
+    out = []
+    for name, ins in _cases(scale).items():
+        cp = compile_program(ALL[name])
+        sharded = sum(d >= Dist.ONED_ROW for d in cp.dists.values())
+        dp = compile_distributed(cp, mesh, ("data",), mode="shardmap")
+        rep = compile_distributed(cp, mesh, ("data",), mode="shardmap",
+                                  shard_dense=False)
+        t_shard = _time(lambda: dp.run(ins))
+        t_rep = _time(lambda: rep.run(ins))
+        out.append((name, t_shard, t_rep, sharded))
+    return out
+
+
+def main():
+    print("name,shardmap_ms,replicated_ms,sharded_dense_arrays")
+    for name, a, b, k in rows():
+        print(f"{name},{a:.1f},{b:.1f},{k}")
+
+
+if __name__ == "__main__":
+    main()

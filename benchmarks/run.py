@@ -6,6 +6,9 @@ Sections:
   [table1]  translation time per program (paper Table 1)
   [fig3]    generated vs hand-written JAX per program (paper Figure 3)
   [sec5]    packed/tiled matrices (paper §5)
+  [dist]    shardmap (inferred shardings) vs replicated per program on a
+            forced 8-host-device mesh (DESIGN.md §6); run this section in
+            a FRESH process (it forces XLA_FLAGS before importing jax)
 """
 from __future__ import annotations
 
@@ -28,8 +31,21 @@ def main() -> None:
     ap.add_argument("--json-out", default=os.path.join(
         _REPO, "BENCH_programs.json"),
         help="fig3 artifact path for the perf trajectory ('' disables)")
+    ap.add_argument("--dist-json-out", default=os.path.join(
+        _REPO, "BENCH_distributed.json"),
+        help="dist artifact path ('' disables)")
     args = ap.parse_args()
     sections = args.sections.split(",")
+
+    if "dist" in sections:
+        if sections != ["dist"]:
+            # forcing host devices would skew every other section's
+            # timings (and the BENCH_programs.json perf trajectory)
+            ap.error("--sections dist must run alone (fresh process): "
+                     "it forces XLA host device count before jax loads")
+        # must run before anything imports jax: forces host device count
+        from benchmarks import distributed
+        distributed._force_devices()
 
     if "table1" in sections:
         from benchmarks import translation_time
@@ -65,6 +81,27 @@ def main() -> None:
         for name, t in tiled.rows():
             print(f"{name},{t:.0f}")
         print()
+
+    if "dist" in sections:
+        from benchmarks import distributed
+        print("[dist] shardmap (inferred shardings) vs replicated "
+              f"({distributed.mesh_devices()} forced host devices)")
+        print("name,shardmap_ms,replicated_ms,sharded_dense_arrays")
+        rows = distributed.rows(args.scale)
+        for name, a, b, k in rows:
+            print(f"{name},{a:.1f},{b:.1f},{k}")
+        print()
+        if args.dist_json_out:
+            with open(args.dist_json_out, "w") as f:
+                json.dump({"section": "dist", "scale": args.scale,
+                           "devices": distributed.mesh_devices(),
+                           "unit": "ms_per_run",
+                           "rows": [{"name": n,
+                                     "shardmap_ms": round(a, 2),
+                                     "replicated_ms": round(b, 2),
+                                     "sharded_dense_arrays": k}
+                                    for n, a, b, k in rows]}, f, indent=1)
+            print(f"[dist] wrote {args.dist_json_out}")
 
 
 if __name__ == "__main__":

@@ -4,14 +4,24 @@ The paper reports DIABLO at 5–14.5 s (scalac-based), MOLD at 11–340 s and
 CASPER at 10 s–19 h (program synthesis).  Our compositional translator runs
 in milliseconds per program because it is rule-driven (no template search,
 no synthesis) — validating the paper's central efficiency claim, and then
-some.  Columns: name, translate_ms (frontend+check+Fig.2 rules),
-first_run_ms (includes XLA jit of the bulk plan).
+some.  Columns: name, translate_ms (frontend+check+Fig.2 rules+plan
+pipeline, i.e. the full `compile_program` path to an executable
+CompiledProgram), first_run_ms (includes XLA jit of the bulk plan).
+
+Runnable standalone:  python benchmarks/translation_time.py
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
 
 import numpy as np
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def rows():

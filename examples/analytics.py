@@ -1,7 +1,8 @@
 """Distributed data-analytics example: PageRank and KMeans written as
 imperative loops, compiled by DIABLO-JAX, and executed over an 8-device
-mesh with the paper's operator mapping (sharded bags -> local segment-⊕ ->
-psum).
+mesh with the paper's operator mapping — sharded bags AND, via the
+distribution-analysis pass (DESIGN.md §6), sharded dense arrays: the rank
+vectors are ONED_ROW row blocks, not replicas.
 
   PYTHONPATH=src python examples/analytics.py
 """
@@ -16,6 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core import compile_program
+from repro.core.dist_analysis import Dist
 from repro.core.distributed import compile_distributed
 from repro.core.programs import kmeans_step, pagerank
 from repro.launch.mesh import make_test_mesh
@@ -31,11 +33,19 @@ def main():
          rng.integers(0, nvert, nedge).astype(np.float64))
     ins = dict(E=E, P=np.full(nvert, 1 / nvert), NP=np.zeros(nvert),
                C=np.zeros(nvert), N=nvert, num_steps=5.0, steps=0.0, b=0.85)
-    dp = compile_distributed(pagerank, mesh, ("data",), mode="shardmap")
+    cp = compile_program(pagerank)
+    print(cp.explain())        # operator + inferred sharding per statement
+    sharded = [a for a, d in cp.dists.items() if d >= Dist.ONED_ROW]
+    print(f"\ndense arrays sharded (not replicated): {sorted(sharded)}\n")
+    dp = compile_distributed(cp, mesh, ("data",), mode="shardmap")
     ranks = np.asarray(dp.run(ins)["P"])
-    single = np.asarray(compile_program(pagerank).run(ins)["P"])
+    single = np.asarray(cp.run(ins)["P"])
     print(f"pagerank: top vertex {ranks.argmax()} rank={ranks.max():.5f} "
           f"(dist vs single max err {np.abs(ranks - single).max():.2e})")
+    # REP-everything fallback: same result, replicated placement
+    rep = np.asarray(compile_distributed(cp, mesh, ("data",),
+                                         shard_dense=False).run(ins)["P"])
+    print(f"          REP fallback max err {np.abs(rep - single).max():.2e}")
 
     # ---- one KMeans step on 2-D points ----
     npts, K = 4000, 8

@@ -5,9 +5,12 @@
 #   → analysis.check (Def. 3.1 restrictions)
 #   → translate (Fig. 2 rules E/K/D/U/S + Rule 2 unnesting)
 #   → passes.plan_program (optimizer pipeline → physical-plan IR, plan.py:
-#     Rules 16/17, einsum recognition, §5 tiled fusion, DSE, update fusion)
+#     Rules 16/17, einsum recognition, §5 tiled fusion, DSE, update fusion,
+#     distribution analysis: dist_analysis.py infers a per-array sharding
+#     REP ≤ ONED_ROW ≤ TWOD_BLOCK, printed by CompiledProgram.explain())
 #   → lower.PlanExecutor (plan nodes → JAX, runtime guards + fallbacks)
-#   → distributed (shard_map / gspmd execution of the same plan over a mesh)
+#   → distributed (shard_map / gspmd execution of the same plan over a mesh;
+#     bags AND inferred-ONED_ROW dense arrays shard as row blocks)
 from .analysis import check
 from .frontend import (bag, dim, intscalar, loop_program, map_, matrix,
                        parse_program, scalar, vector)

@@ -21,6 +21,12 @@ Theorem 3.1; documented in DESIGN.md):
 
 For-loops containing while-loops: the paper sequentializes them; we reject
 with a diagnostic (none of the paper's benchmarks need it).
+
+Scope note: this module decides WHETHER a loop parallelizes (AST-level,
+reject-or-accept).  The complementary question of WHERE each array lives
+on a device mesh — replicated or partitioned — is answered later, over
+the finished physical plan, by dist_analysis.py (DESIGN.md §6); that
+analysis never rejects, it only meets distributions down to REP.
 """
 from __future__ import annotations
 

@@ -1,0 +1,319 @@
+"""Distribution analysis: infer a sharding for every dense array.
+
+The paper's scalability argument (§6, Fig. 4–5) assumes *all* large
+operands are partitioned.  Sharding only bags (the pre-pass behaviour)
+replicates every dense array — PageRank ranks, k-means centroids and
+matrix-factorization factors — so range-driven programs could not grow
+past one device's memory.  This pass closes that gap the HPAT way
+(Totoni et al., `distributed_analysis.py`): a fixed-point inference over
+the physical plan assigning each array a distribution from the lattice
+
+    REP  ≤  ONED_ROW  ≤  TWOD_BLOCK
+
+    REP         replicated on every device (always-correct fallback, ⊥)
+    ONED_ROW    block-partitioned along dim 0 over the dp mesh axes
+    TWOD_BLOCK  2-D block-partition candidate (matmul operands); the
+                current executors place it as ONED_ROW — the lattice
+                point records that a 2-D placement would be legal
+
+Inference is optimistic-then-meet: every dense array starts at the top
+(`TWOD_BLOCK`) and constraints only move it *down* (`meet` = min), so the
+fixed point exists and is reached monotonically.  Two HPAT-style sweeps:
+
+  sweep 1 (writes)  each plan node caps its destination at the best
+                    distribution the distributed executor can *produce*
+                    for that node shape (see `_dest_cap`); arrays read in
+                    a SeqLoop condition meet to REP (the condition is
+                    evaluated replicated every iteration).
+  sweep 2 (reads)   "rebalance": any appearance outside a matmul-shaped
+                    contraction caps an array at ONED_ROW, so TWOD_BLOCK
+                    survives only for pure matmul operands.
+
+The sweeps repeat until no distribution changes (the lattice has height
+2, so at most a few iterations).  Loop-carried arrays need no extra
+constraint: a distribution is a property of the *array*, not of a program
+point, so a SeqLoop body sees one stable sharding across iterations by
+construction — the meet over all its writers.
+
+Guarantee: a changed distribution never changes a result, only its
+placement.  Every node keeps a replicated execution path (distributed.py
+falls back to it whenever a runtime shape guard fails), and REP-everything
+remains the global fallback (`PlanConfig.infer_distributions=False` or
+`DistributedProgram(shard_dense=False)`).
+
+Annotations: each leaf plan node gets a `shardings` dict — destination
+first, then read operands — mapping array name to a `Sharding` whose str()
+is e.g. ``ONED_ROW(i)`` (sharded on dim 0, aligned with axis var `i` in
+this node), ``ONED_ROW`` (sharded, unaligned access here), ``TWOD_BLOCK``
+or ``REP``.  `CompiledProgram.explain()` prints them per operand.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import IntEnum
+from typing import Optional
+
+from . import plan as P
+from .comprehension import Get
+from .loop_ast import BinOp, Call, Const, Program, UnOp, Var
+
+
+class Dist(IntEnum):
+    """The distribution lattice; smaller = more replicated (meet = min)."""
+    REP = 0
+    ONED_ROW = 1
+    TWOD_BLOCK = 2
+
+
+def meet(a: Dist, b: Dist) -> Dist:
+    return Dist(min(a, b))
+
+
+@dataclass(frozen=True)
+class Sharding:
+    """One operand's inferred placement within one plan node."""
+    dist: Dist
+    axis: Optional[str] = None    # aligned iteration-axis var, when known
+
+    def __str__(self) -> str:
+        if self.dist == Dist.ONED_ROW and self.axis:
+            return f"ONED_ROW({self.axis})"
+        return self.dist.name
+
+
+# ---------------------------------------------------------------------------
+# plan walking helpers
+# ---------------------------------------------------------------------------
+
+def dense_arrays(prog: Program) -> frozenset:
+    return frozenset(n for n, t in prog.params.items()
+                     if t.kind in ("vector", "matrix", "map"))
+
+
+def leaf_nodes(nodes):
+    """Yield every leaf plan node (Fused parts and SeqLoop bodies opened)."""
+    for n in nodes:
+        if isinstance(n, P.SeqLoop):
+            yield from leaf_nodes(n.body)
+        elif isinstance(n, P.Fused):
+            yield from n.parts
+        else:
+            yield n
+
+
+def _walk_gathers(e, acc: dict):
+    if isinstance(e, (P.Gather, Get)):
+        acc.setdefault(e.array, []).append(tuple(e.idxs))
+        for i in e.idxs:
+            _walk_gathers(i, acc)
+    elif isinstance(e, BinOp):
+        _walk_gathers(e.lhs, acc)
+        _walk_gathers(e.rhs, acc)
+    elif isinstance(e, UnOp):
+        _walk_gathers(e.e, acc)
+    elif isinstance(e, Call):
+        for a in e.args:
+            _walk_gathers(a, acc)
+
+
+def gathers_of(node) -> dict:
+    """Array name → list of index tuples for every read in the node (for
+    Fused, the union over all parts: alignment must hold everywhere)."""
+    acc: dict = {}
+    if isinstance(node, P.TiledMatmul):
+        return gathers_of(node.contract)
+    if isinstance(node, P.Fused):
+        for p in node.parts:
+            for name, idx_lists in gathers_of(p).items():
+                acc.setdefault(name, []).extend(idx_lists)
+        for e in node.space.conds:
+            _walk_gathers(e, acc)
+        return acc
+    exprs = list(node.space.conds)
+    if hasattr(node, "value"):
+        exprs.append(node.value)
+    exprs.extend(getattr(node, "keys", ()))
+    if isinstance(node, P.EinsumContract) and node.fallback is not None:
+        exprs.append(node.fallback.value)   # original value pre-recognition
+    for e in exprs:
+        _walk_gathers(e, acc)
+    return acc
+
+
+def aligned_reads(node, axis_var: str) -> frozenset:
+    """Arrays whose EVERY read in `node` is leading-indexed by `axis_var`
+    (dim 0 of the array walks in lockstep with the sharded axis, so a
+    per-shard row block serves all of the node's reads of it)."""
+    out = set()
+    for name, idx_lists in gathers_of(node).items():
+        if all(idxs and isinstance(idxs[0], Var) and idxs[0].name == axis_var
+               for idxs in idx_lists):
+            out.add(name)
+    return frozenset(out)
+
+
+def leading_key_var(node) -> Optional[str]:
+    """The axis var indexing dim 0 of the destination, when it is one."""
+    if isinstance(node, P.TiledMatmul):
+        node = node.contract
+    keys = getattr(node, "key_axes", None)
+    if keys:
+        return keys[0]
+    keys = getattr(node, "keys", None)
+    if keys and isinstance(keys[0], Var) and \
+            keys[0].name in node.space.axis_vars:
+        return keys[0].name
+    return None
+
+
+def _static_zero(e) -> bool:
+    return isinstance(e, Const) and e.value == 0
+
+
+def round_axis(node) -> Optional[str]:
+    """The axis a shard_map round for THIS node would split: the single bag
+    axis when the space is bag-driven, else the leading destination key
+    axis provided it is a range axis starting at 0 (so contiguous row
+    blocks of the destination line up with contiguous index blocks of the
+    axis).  None when no such axis exists (replicated execution)."""
+    bags = [a for a in node.space.axes if a.kind == "bag"]
+    if len(bags) == 1:
+        return bags[0].var
+    if bags:
+        return None                      # bag join: no single shard axis
+    lead = leading_key_var(node)
+    for a in node.space.axes:
+        if a.var == lead and a.kind == "range" and _static_zero(a.lo):
+            return lead
+    return None
+
+
+def _dest_cap(node) -> Optional[Dist]:
+    """Best distribution the distributed executor can PRODUCE for this
+    node's destination; None when the destination is a scalar."""
+    if isinstance(node, P.ScalarReduce):
+        if node.point is None:
+            return None               # scalar destination
+        return Dist.ONED_ROW if node.space.has_bag else Dist.REP
+    if isinstance(node, P.SegmentReduce):
+        # computed keys: partial-⊕ + psum_scatter works only when the bag
+        # drives the round; range-driven segment writes run replicated
+        return Dist.ONED_ROW if node.space.has_bag else Dist.REP
+    if isinstance(node, (P.AxisReduce, P.EinsumContract, P.TiledMatmul)):
+        if node.space.has_bag:
+            return Dist.ONED_ROW      # unaligned partial + psum_scatter
+        return Dist.ONED_ROW if round_axis(node) is not None else Dist.REP
+    if isinstance(node, (P.MapExpr, P.Scatter)):
+        if isinstance(node, P.MapExpr) and node.key_axes is None:
+            return None               # guarded scalar assignment
+        ra = round_axis(node)
+        if ra is not None and ra == leading_key_var(node):
+            return Dist.ONED_ROW      # aligned store round, rows stay local
+        return Dist.REP               # scattered writes cross shards
+    return Dist.REP
+
+
+def _matmul_operands(node) -> frozenset:
+    """Gather arrays eligible to stay TWOD_BLOCK: the two rank-2 factors of
+    a matmul-shaped contraction (the pass_tiled_fusion shape)."""
+    if isinstance(node, P.TiledMatmul):
+        node = node.contract
+    if not (isinstance(node, P.EinsumContract) and node.product is not None):
+        return frozenset()
+    fa = node.product.factor_axes
+    if len(fa) == 2 and len(fa[0]) == 2 and len(fa[1]) == 2 \
+            and fa[0][1] == fa[1][0] \
+            and tuple(node.key_axes) == (fa[0][0], fa[1][1]):
+        return frozenset(f.array for f in node.product.factors)
+    return frozenset()
+
+
+# ---------------------------------------------------------------------------
+# the analysis
+# ---------------------------------------------------------------------------
+
+def analyze(nodes: list, prog: Program, config=None) -> dict:
+    """Infer array distributions by fixed-point meet; annotate every leaf
+    node with its `shardings` dict and return {array: Dist}."""
+    dense = dense_arrays(prog)
+    if config is not None and not getattr(config, "infer_distributions", True):
+        dists = {a: Dist.REP for a in dense}
+        _annotate(nodes, dists)
+        return dists
+
+    dists = {a: Dist.TWOD_BLOCK for a in dense}   # optimistic top
+
+    def cap(name, d):
+        if name in dists and dists[name] > d:
+            dists[name] = Dist(d)
+            return True
+        return False
+
+    changed = True
+    while changed:                    # monotone descent on a height-2 lattice
+        changed = False
+        # sweep 1: write-side constraints (what each node can produce)
+        for n in _all_nodes(nodes):
+            if isinstance(n, P.SeqLoop):
+                acc: dict = {}
+                _walk_gathers(n.cond, acc)
+                for name in acc:      # cond is evaluated replicated
+                    changed |= cap(name, Dist.REP)
+                continue
+            dc = _dest_cap(n)
+            if dc is not None and n.dest in dists:
+                changed |= cap(n.dest, dc)
+        # sweep 2: read-side rebalance (TWOD only for pure matmul operands)
+        for n in leaf_nodes(nodes):
+            mm = _matmul_operands(n)
+            for name in gathers_of(n):
+                if name not in mm:
+                    changed |= cap(name, Dist.ONED_ROW)
+            if getattr(n, "dest", None) in dists and n.dest not in mm:
+                changed |= cap(n.dest, Dist.ONED_ROW)
+
+    _annotate(nodes, dists)
+    return dists
+
+
+def _all_nodes(nodes):
+    """Leaf nodes plus the SeqLoop containers themselves."""
+    for n in nodes:
+        if isinstance(n, P.SeqLoop):
+            yield n
+            yield from _all_nodes(n.body)
+        elif isinstance(n, P.Fused):
+            yield from n.parts
+        else:
+            yield n
+
+
+def _annotate(nodes, dists: dict):
+    for n in leaf_nodes(nodes):
+        sh: dict = {}
+        axis = round_axis(n)
+        dest = getattr(n, "dest", None)
+        if dest in dists:
+            lead = leading_key_var(n)
+            sh[dest] = Sharding(dists[dest],
+                                lead if lead == axis and
+                                dists[dest] >= Dist.ONED_ROW else None)
+        ar = aligned_reads(n, axis) if axis else frozenset()
+        for name in sorted(gathers_of(n)):
+            if name in dists and name != dest:
+                sh[name] = Sharding(dists[name],
+                                    axis if name in ar and
+                                    dists[name] >= Dist.ONED_ROW else None)
+        n.shardings = sh
+        if isinstance(n, P.TiledMatmul):
+            n.contract.shardings = sh   # explain() shows the dense-lhs form
+
+
+def collect(nodes) -> dict:
+    """Program-level {array: Dist} from node annotations (analyze() wrote a
+    single consistent value per array, so any occurrence is the answer)."""
+    out: dict = {}
+    for n in leaf_nodes(nodes):
+        for name, sh in (getattr(n, "shardings", None) or {}).items():
+            out[name] = sh.dist
+    return out

@@ -1,29 +1,54 @@
 """Distributed execution of compiled loop programs over a device mesh —
 the paper's DISC backend, retargeted from Spark shuffles to TPU collectives
-(DESIGN.md §4).
+(DESIGN.md §4, §6).
 
 Both modes consume the SAME physical plan (CompiledProgram.plan) through
-the public executor interface; bag offsets and logical bag lengths are plan
+the public executor interface; bag offsets/limits and the dense-array
+analogues (row offsets, logical row limits, axis overrides) are plan
 parameters (lower.ExecContext), not lowerer state.
 
-* ``shardmap`` (paper-faithful operator mapping): bags are sharded over the
-  dp axes; every reduction node whose iteration space is bag-driven runs
-  as  *local partial-⊕ over the bag shard → psum*  under shard_map — the
-  reduction-based replacement for the paper's shuffle-based group-by.  A
-  `Fused` node (update-fusion pass) runs all its parts in ONE shard_map
-  round.  Dense arrays are replicated (the paper's "broadcast small arrays
-  to all workers" future-work optimization, here the default: index spaces
-  are bounded).  Nodes without bag axes execute replicated (identical on
-  all shards).
+* ``shardmap`` (paper-faithful operator mapping): bags shard over the dp
+  axes, and — per the distribution-analysis pass (dist_analysis.py) —
+  dense arrays inferred ONED_ROW/TWOD_BLOCK shard as contiguous dim-0 row
+  blocks too, instead of replicating.  Each plan node runs as one of:
 
-* ``gspmd``: the single-device plan executed on sharded inputs; XLA's SPMD
-  partitioner inserts the collectives.  Works for every program, including
-  range-driven contractions (matmul → partitioned einsum).
+    aligned store round    MapExpr/Scatter whose leading destination key IS
+                           the round axis: every shard writes only its own
+                           row block; no collective at all.
+    aligned reduce round   AxisReduce/EinsumContract/TiledMatmul keyed by
+                           the round axis: local partial-⊕ into the local
+                           block; no collective.
+    unaligned reduce round local partial-⊕ over the shard, then `psum`
+                           (REP destination), or `psum_scatter` /
+                           allreduce+slice (ONED_ROW destination) — the
+                           reduction-based replacement for the paper's
+                           shuffle-based group-by.
+    replicated             everything else — identical on all shards; also
+                           the guaranteed fallback whenever a runtime shape
+                           guard fails.  Correct regardless of placement:
+                           outside shard_map the env holds global arrays
+                           and XLA resharding is transparent.
 
-Bags whose length is not divisible by the shard count are PADDED with zero
-rows to the next multiple; the original length travels as a bag limit and
-the executor masks the padding out of every aggregation, so odd-length
-bags shard instead of silently replicating.
+  Reads inside a round localize when the analysis proved them aligned with
+  the round axis (the shard's row block serves every access); otherwise a
+  ONED_ROW operand is `all_gather`ed on entry — the only place a gather
+  collective is ever inserted, exactly where the analysis says a read
+  crosses shards.  A `Fused` node still runs all its parts in ONE
+  shard_map round (mixed aligned/unaligned parts allowed).
+
+* ``gspmd``: the single-device plan executed on sharded inputs; XLA's
+  SPMD partitioner inserts the collectives.  Works for every program,
+  including range-driven contractions (matmul → partitioned einsum).
+
+Bags AND ONED_ROW dense arrays whose dim-0 length is not divisible by the
+shard count are PADDED with zero rows to the next multiple; the original
+length travels as a bag limit / array limit and the executor masks reads
+and drops writes beyond it, so padding can never change a result (the
+paper's §3.4 empty-bag semantics are enforced against the LOGICAL bound).
+Padded outputs are sliced back to their logical length on return.
+
+`shard_dense=False` (or `PlanConfig.infer_distributions=False`) restores
+REP-everything — the pre-analysis behaviour and the ⊥ of the lattice.
 """
 from __future__ import annotations
 
@@ -33,12 +58,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from . import plan
+from .dist_analysis import Dist, aligned_reads, leading_key_var, round_axis
 from .lower import COMBINE, CompiledProgram, ExecContext, identity
+
+_STORE_NODES = (plan.MapExpr, plan.Scatter)
+_ALIGNABLE_REDUCES = (plan.AxisReduce, plan.EinsumContract, plan.TiledMatmul)
 
 
 class DistributedProgram:
     def __init__(self, cp: CompiledProgram, mesh, dp_axes=("data",),
-                 mode: str = "shardmap"):
+                 mode: str = "shardmap", shard_dense: bool = True):
         self.cp = cp
         self.mesh = mesh
         self.dp = tuple(dp_axes)
@@ -46,16 +75,34 @@ class DistributedProgram:
         self.dp_n = 1
         for a in self.dp:
             self.dp_n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        # placement = inferred distribution, capped at ONED_ROW: TWOD_BLOCK
+        # records 2-D legality but both executors place row blocks today
+        self.dists = dict(cp.dists) if shard_dense else \
+            {a: Dist.REP for a in cp.dists}
+        self.placements = {a: min(d, Dist.ONED_ROW)
+                           for a, d in self.dists.items()}
+        # compiled shard_map round per (node, strategy, static params):
+        # SeqLoop iterations and repeated run() calls reuse the traced
+        # round instead of paying trace+compile every time
+        self._round_cache: dict = {}
+        # env-independent node facts (round axis, aligned reads, gather
+        # names): expression trees are walked once per node, not once per
+        # SeqLoop iteration
+        self._static_cache: dict = {}
+
+    def _placed_oned(self, name) -> bool:
+        return self.placements.get(name, Dist.REP) >= Dist.ONED_ROW
 
     # ------------------------- input placement -------------------------
     def place(self, inputs: dict):
-        """Shard bags over dp, replicate dense arrays.  Bags whose length
-        is not divisible by the shard count are padded with zero rows;
-        returns (placed, bag_limits) where bag_limits maps each padded bag
-        to its logical length — consumers MUST mask rows beyond the limit
-        (DistributedProgram.run threads it through lower.ExecContext)."""
+        """Shard bags and ONED_ROW dense arrays over dp (padding dim 0 with
+        zero rows to a multiple of the shard count), replicate the rest.
+        Returns (placed, bag_limits, array_limits); the limit dicts map
+        each padded name to its logical dim-0 length — consumers MUST mask
+        rows beyond the limit (run() threads them through ExecContext)."""
         out = {}
-        limits: dict[str, int] = {}
+        bag_limits: dict[str, int] = {}
+        array_limits: dict[str, int] = {}
         for name, t in self.cp.program.params.items():
             v = inputs[name]
             if t.kind == "bag":
@@ -67,17 +114,28 @@ class DistributedProgram:
                     cols = tuple(jnp.concatenate(
                         [c, jnp.zeros((pad,) + c.shape[1:], c.dtype)])
                         for c in cols)
-                    limits[name] = n
+                    bag_limits[name] = n
                 out[name] = tuple(
                     jax.device_put(c, NamedSharding(self.mesh, P(self.dp)))
                     for c in cols)
             elif t.kind == "dim":
                 out[name] = int(v)
+            elif t.kind in ("vector", "matrix", "map") \
+                    and self._placed_oned(name):
+                arr = jnp.asarray(v)
+                n = int(arr.shape[0])
+                pad = (-n) % self.dp_n
+                if pad:
+                    arr = jnp.concatenate(
+                        [arr, jnp.zeros((pad,) + arr.shape[1:], arr.dtype)])
+                    array_limits[name] = n
+                out[name] = jax.device_put(
+                    arr, NamedSharding(self.mesh, P(self.dp)))  # row blocks
             else:
                 arr = jnp.asarray(v)
                 out[name] = jax.device_put(
                     arr, NamedSharding(self.mesh, P()))  # broadcast join
-        return out, limits
+        return out, bag_limits, array_limits
 
     # ------------------------- shardmap mode -------------------------
     def _psum(self, part, op: str):
@@ -89,78 +147,241 @@ class DistributedProgram:
             return jax.lax.pmax(part, self.dp)
         raise NotImplementedError(op)
 
-    def _exec_shardmap(self, nodes, env, limits):
+    def _combine_shard(self, part, op: str, shard, dest_oned: bool):
+        """Cross-shard ⊕ of an unaligned partial: psum for a replicated
+        destination; reduce-scatter (or allreduce + local slice for non-+
+        monoids) when the destination lives as row blocks."""
+        if not dest_oned:
+            return self._psum(part, op)
+        if op == "+":
+            return jax.lax.psum_scatter(part, self.dp, scatter_dimension=0,
+                                        tiled=True)
+        full = self._psum(part, op)
+        blk = full.shape[0] // self.dp_n
+        return jax.lax.dynamic_slice_in_dim(full, shard * blk, blk, axis=0)
+
+    # ---- per-node round classification (runtime shape guards) ----
+    def _rows(self, name, env) -> int:
+        v = env[name]
+        col = v[0] if isinstance(v, tuple) else v
+        return int(jnp.shape(col)[0])
+
+    def _round_spec(self, node, env):
+        """Decide how to run `node`: None = replicated; else a dict with
+        the round axis, per-part kinds (store / aligned / reduce) and the
+        read classification (localize vs all_gather).  Every guard failure
+        degrades to a coarser-but-correct strategy, never to an error."""
+        parts = list(node.parts) if isinstance(node, plan.Fused) else [node]
+        dests_set = {p.dest for p in parts}
+        space = node.space
+        static = self._static_cache.get(id(node))
+        if static is None:
+            axis = round_axis(node if not isinstance(node, plan.Fused)
+                              else parts[0])
+            static = (axis,
+                      aligned_reads(node, axis) if axis is not None
+                      else frozenset(),
+                      _gather_names(node))
+            self._static_cache[id(node)] = static
+        axis, aligned, gather_names = static
+        rng = None
+        if space.has_bag:
+            if axis is None and not plan.is_reduce(node):
+                return None
+            axis_rows = self._rows(next(
+                a.bag for a in space.axes if a.kind == "bag"), env) \
+                if axis is not None else None
+        else:
+            if axis is None:
+                return None
+            aspec = next(a for a in space.axes if a.var == axis)
+            try:
+                lo = self.cp.executor.static_int(aspec.lo, env)
+                hi = self.cp.executor.static_int(aspec.hi, env)
+            except Exception:
+                return None
+            if lo != 0 or hi <= 0:
+                return None
+            axis_rows = hi + (-hi) % self.dp_n
+            # no mask needed when the rows tile evenly (limit=None)
+            rng = (axis_rows // self.dp_n,
+                   hi if axis_rows != hi else None)
+
+        def dest_aligned(p):
+            return (axis is not None
+                    and leading_key_var(p) == axis
+                    and self._placed_oned(p.dest)
+                    and self._rows(p.dest, env) == axis_rows)
+
+        kinds = []
+        for p in parts:
+            if isinstance(p, _STORE_NODES):
+                # stores run replicated unless every shard writes (and
+                # reads, for read-modify-writes) strictly within its block
+                if not dest_aligned(p):
+                    return None
+                if p.dest in gather_names and p.dest not in aligned:
+                    return None            # self-read not block-local
+                kinds.append("store")
+            elif plan.is_reduce(p):
+                if isinstance(p, _ALIGNABLE_REDUCES) and dest_aligned(p):
+                    kinds.append("aligned")
+                elif space.has_bag:
+                    kinds.append("reduce")
+                else:
+                    return None            # range round: no psum source
+            else:
+                return None
+        # localized reads must tile exactly like the round axis
+        local = frozenset(n for n in aligned
+                          if n not in dests_set
+                          and self._placed_oned(n)
+                          and self._rows(n, env) == axis_rows)
+        return {"parts": parts, "kinds": kinds, "axis": axis, "rng": rng,
+                "local": local}
+
+    def _exec_shardmap(self, nodes, env, limits, array_limits):
         cp = self.cp
         for node in nodes:
             if isinstance(node, plan.SeqLoop):
                 # sequential driver; body nodes distributed recursively
                 while bool(cp.executor.eval_scalar(node.cond, env)):
-                    self._exec_shardmap(node.body, env, limits)
+                    self._exec_shardmap(node.body, env, limits, array_limits)
                 continue
 
-            bag_driven = plan.is_reduce(node) and node.space.has_bag
-            if not bag_driven:
+            spec = self._round_spec(node, env) \
+                if (plan.is_reduce(node) or isinstance(node, _STORE_NODES)) \
+                else None
+            if spec is None:
                 # replicated execution (identical result on all shards)
-                cp.execute(env, bag_limits=limits, nodes=[node])
+                cp.execute(env, bag_limits=limits,
+                           array_limits=array_limits, nodes=[node])
                 continue
+            self._run_round(node, spec, env, limits, array_limits)
 
-            # local partial ⊕ over the bag shard, then psum over dp
-            parts = tuple(node.parts) if isinstance(node, plan.Fused) \
-                else (node,)
-            dests = tuple(p.dest for p in parts)
-            ops = plan.ops_of(node)
-            params = self.cp.program.params
-            reads = sorted(set(node.reads) - set(dests))
-            # dims are static python ints (they define extents): close over
-            # them — as shard_map operands they would arrive as tracers
-            dims = {n: env[n] for n in reads
-                    if n in params and params[n].kind == "dim"}
-            names = [n for n in reads if n not in dims]
-            bagnames = node.space.bag_names
-            in_specs = []
-            args = []
-            for n in names:
-                v = env[n]
-                if n in bagnames:
-                    in_specs.append(tuple(P(self.dp) for _ in v))
+    def _run_round(self, node, spec, env, limits, array_limits):
+        cp = self.cp
+        parts, kinds = spec["parts"], spec["kinds"]
+        axis, rng, local = spec["axis"], spec["rng"], spec["local"]
+        dests = [p.dest for p in parts]
+        params = cp.program.params
+        reads = sorted(set(node.reads) - set(dests))
+        # dims are static python ints (they define extents): close over
+        # them — as shard_map operands they would arrive as tracers
+        dims = {n: env[n] for n in reads
+                if n in params and params[n].kind == "dim"}
+        names = [n for n in reads if n not in dims]
+        bagnames = node.space.bag_names
+        # ONED_ROW reads the analysis could NOT prove aligned cross shards:
+        # pass them as blocks and all_gather on entry
+        gathered = tuple(n for n in names
+                         if n not in bagnames and n not in local
+                         and self._placed_oned(n))
+        in_specs = []
+        args = []
+        for n in names:
+            v = env[n]
+            if n in bagnames:
+                in_specs.append(tuple(P(self.dp) for _ in v))
+            elif n in local or n in gathered:
+                in_specs.append(P(self.dp))
+            else:
+                in_specs.append(P() if not isinstance(v, tuple)
+                                else tuple(P() for _ in v))
+            args.append(v)
+        store_dests = [p.dest for p, k in zip(parts, kinds) if k == "store"]
+        for d in store_dests:
+            in_specs.append(P(self.dp))
+            args.append(env[d])
+
+        dest_shapes = tuple(jnp.shape(env[d]) for d in dests)
+        dest_dtypes = tuple(jnp.asarray(env[d]).dtype for d in dests)
+        node_lims = {b: limits[b] for b in bagnames if b in limits}
+        arr_lims = {n: array_limits[n]
+                    for n in set(names) | set(dests) if n in array_limits}
+        dest_oned = {d: self._placed_oned(d) for d in dests}
+        out_specs = tuple(
+            P(self.dp) if k in ("store", "aligned") or dest_oned[p.dest]
+            else P()
+            for p, k in zip(parts, kinds))
+
+        # everything local_fn closes over, so the traced round is reusable
+        cache_key = (id(node), tuple(kinds), tuple(names),
+                     tuple(store_dests), gathered, tuple(sorted(local)),
+                     tuple(sorted(node_lims.items())),
+                     tuple(sorted(arr_lims.items())),
+                     tuple(sorted(dims.items())),
+                     dest_shapes, dest_dtypes,
+                     spec["axis"], spec["rng"])
+        fn = self._round_cache.get(cache_key)
+        if fn is not None:
+            results = fn(*args)
+            return self._apply(parts, kinds, results, env)
+
+        def local_fn(*vals, _parts=parts, _kinds=kinds,
+                     _names=tuple(names), _stores=tuple(store_dests),
+                     _bags=tuple(bagnames), _gather=gathered,
+                     _local=tuple(local), _lims=node_lims, _alims=arr_lims,
+                     _dims=dims, _shapes=dest_shapes, _dtypes=dest_dtypes,
+                     _axis=axis, _rng=rng):
+            e2 = dict(zip(_names + _stores, vals))
+            e2.update(_dims)
+            # globalize indexes: shard-local row r is offset + r (needed
+            # when a bag/axis index appears in keys or values)
+            shard = 0
+            for a in self.dp:
+                shard = shard * self.mesh.shape[a] + jax.lax.axis_index(a)
+            for n in _gather:      # analysis: this read crosses shards
+                e2[n] = jax.lax.all_gather(e2[n], self.dp, axis=0,
+                                           tiled=True)
+            offs = {b: shard * e2[b][0].shape[0] for b in _bags}
+            row_offs = {n: shard * e2[n].shape[0] for n in _local}
+            axis_ov = {}
+            if _rng is not None:
+                blk, hi = _rng
+                axis_ov[_axis] = (shard * blk, blk, hi)
+            outs = []
+            for p, k, shp, dt in zip(_parts, _kinds, _shapes, _dtypes):
+                ro = dict(row_offs)
+                if k == "store":
+                    ro[p.dest] = shard * e2[p.dest].shape[0]
+                    ctx = ExecContext(offs, _lims, ro, _alims, axis_ov)
+                    outs.append(cp.executor.run_node(p, e2, ctx))
+                elif k == "aligned":
+                    blk0 = shp[0] // self.dp_n
+                    e2[p.dest] = jnp.full((blk0,) + tuple(shp[1:]),
+                                          identity(p.op, dt))
+                    ro[p.dest] = shard * blk0
+                    ctx = ExecContext(offs, _lims, ro, _alims, axis_ov)
+                    outs.append(cp.executor.run_node(p, e2, ctx))
                 else:
-                    in_specs.append(P() if not isinstance(v, tuple)
-                                    else tuple(P() for _ in v))
-                args.append(v)
-
-            dest_shapes = tuple(jnp.shape(env[d]) for d in dests)
-            dest_dtypes = tuple(jnp.asarray(env[d]).dtype for d in dests)
-            node_lims = {b: limits[b] for b in bagnames if b in limits}
-
-            def local_fn(*vals, _parts=parts, _names=tuple(names),
-                         _bags=tuple(bagnames), _lims=node_lims, _dims=dims,
-                         _shapes=dest_shapes, _dtypes=dest_dtypes):
-                e2 = dict(zip(_names, vals))
-                e2.update(_dims)
-                for p, shp, dt in zip(_parts, _shapes, _dtypes):
                     e2[p.dest] = jnp.full(shp, identity(p.op, dt))
-                # globalize bag indexes: shard-local row r is global
-                # offset + r (needed when the bag index appears in keys)
-                shard = 0
-                for a in self.dp:
-                    shard = shard * self.mesh.shape[a] + jax.lax.axis_index(a)
-                offs = {b: shard * e2[b][0].shape[0] for b in _bags}
-                ctx = ExecContext(bag_offsets=offs, bag_limits=_lims)
-                return tuple(
-                    self._psum(cp.executor.run_node(p, e2, ctx), p.op)
-                    for p in _parts)
+                    ctx = ExecContext(offs, _lims, ro, _alims, axis_ov)
+                    part_res = cp.executor.run_node(p, e2, ctx)
+                    outs.append(self._combine_shard(
+                        part_res, p.op, shard, dest_oned[p.dest]))
+            return tuple(outs)
 
-            fn = shard_map(local_fn, mesh=self.mesh,
-                           in_specs=tuple(in_specs),
-                           out_specs=tuple(P() for _ in parts))
-            partials = fn(*args)
-            for d, op, partial in zip(dests, ops, partials):
-                env[d] = COMBINE[op](jnp.asarray(env[d]), partial)
+        fn = jax.jit(shard_map(local_fn, mesh=self.mesh,
+                               in_specs=tuple(in_specs),
+                               out_specs=out_specs))
+        self._round_cache[cache_key] = fn
+        self._apply(parts, kinds, fn(*args), env)
+
+    @staticmethod
+    def _apply(parts, kinds, results, env):
+        """Fold a round's outputs back into the env: stores replace their
+        destination, reductions ⊕-combine with it."""
+        for p, k, res in zip(parts, kinds, results):
+            if k == "store":
+                env[p.dest] = res
+            else:
+                env[p.dest] = COMBINE[p.op](jnp.asarray(env[p.dest]), res)
 
     # ------------------------- entry -------------------------
     def run(self, inputs: dict) -> dict:
         env = {}
-        placed, limits = self.place(inputs)
+        placed, limits, array_limits = self.place(inputs)
         for name, t in self.cp.program.params.items():
             v = placed[name]
             if t.kind in ("vector", "matrix", "map"):
@@ -169,15 +390,27 @@ class DistributedProgram:
             else:
                 env[name] = v
         if self.mode == "gspmd":
-            self.cp.execute(env, bag_limits=limits)
+            self.cp.execute(env, bag_limits=limits,
+                            array_limits=array_limits)
         else:
-            self._exec_shardmap(self.cp.plan, env, limits)
-        return {n: env[n] for n in self.cp.program.outputs}
+            self._exec_shardmap(self.cp.plan, env, limits, array_limits)
+        out = {}
+        for n in self.cp.program.outputs:
+            v = env[n]
+            lim = array_limits.get(n)
+            out[n] = v if lim is None else v[:lim]   # drop pad rows
+        return out
+
+
+def _gather_names(node) -> frozenset:
+    from .dist_analysis import gathers_of
+    return frozenset(gathers_of(node))
 
 
 def compile_distributed(fn_or_prog, mesh, dp_axes=("data",),
-                        mode: str = "shardmap", **kw) -> DistributedProgram:
+                        mode: str = "shardmap", shard_dense: bool = True,
+                        **kw) -> DistributedProgram:
     from .lower import compile_program
     cp = fn_or_prog if isinstance(fn_or_prog, CompiledProgram) \
         else compile_program(fn_or_prog, **kw)
-    return DistributedProgram(cp, mesh, dp_axes, mode)
+    return DistributedProgram(cp, mesh, dp_axes, mode, shard_dense)

@@ -117,9 +117,29 @@ class Axes:
 class ExecContext:
     """Per-call plan parameters for distributed execution: traced global
     index offsets for sharded bags, and logical bag lengths when columns
-    were padded to a multiple of the shard count."""
+    were padded to a multiple of the shard count.
+
+    The dense-array analogues (distribution analysis, DESIGN.md §6) reuse
+    the same machinery for ONED_ROW arrays:
+
+      row_offsets     array → traced global row index of the local block's
+                      first row; the executor subtracts it so dim-0 reads
+                      and writes of the array target the per-shard block
+      array_limits    array → logical dim-0 length when rows were padded
+                      to a multiple of the shard count; reads at global
+                      row ≥ limit are masked and writes dropped, so pad
+                      rows can never change a result (paper §3.4 empty-bag
+                      semantics against the LOGICAL bound)
+      axis_overrides  range-axis var → (offset, extent, limit): the round
+                      localizes the axis to the shard's row block exactly
+                      like a sharded bag axis (offset globalizes the index
+                      var, rows beyond `limit` are masked out)
+    """
     bag_offsets: dict = field(default_factory=dict)
     bag_limits: dict = field(default_factory=dict)
+    row_offsets: dict = field(default_factory=dict)
+    array_limits: dict = field(default_factory=dict)
+    axis_overrides: dict = field(default_factory=dict)
 
 
 _EMPTY_CTX = ExecContext()
@@ -156,6 +176,12 @@ class PlanExecutor:
         binding: dict[str, tuple] = {}  # var -> ("range", axis, lo)|("bagval", axis, col)
         for a in space.axes:
             if a.kind == "range":
+                ov = ctx.axis_overrides.get(a.var)
+                if ov is not None:      # localized to the shard's row block
+                    off, ext, _lim = ov
+                    ax.add(a.var, ext)
+                    binding[a.var] = ("range", a.var, off)
+                    continue
                 lo = self.static_int(a.lo, env)
                 hi = self.static_int(a.hi, env)
                 ax.add(a.var, max(hi - lo, 0))
@@ -169,7 +195,12 @@ class PlanExecutor:
                                   ctx.bag_offsets.get(a.bag, 0))
         base_masks = []
         for a in space.axes:
-            if a.kind != "bag":
+            if a.kind == "range":
+                ov = ctx.axis_overrides.get(a.var)
+                if ov is not None and ov[2] is not None:
+                    off, ext, lim = ov    # mask rows ≥ the logical extent
+                    base_masks.append(ax.expand(
+                        (off + jnp.arange(ext)) < lim, a.var))
                 continue
             bagv = env[a.bag]
             cols = bagv if isinstance(bagv, tuple) else (bagv,)
@@ -183,7 +214,8 @@ class PlanExecutor:
         return ax, binding, list(space.conds), base_masks
 
     # ---- expression evaluation over the iteration space ----
-    def eval(self, e, env, ax: Axes, binding, masks: list):
+    def eval(self, e, env, ax: Axes, binding, masks: list,
+             ctx: ExecContext = _EMPTY_CTX):
         if isinstance(e, Const):
             return jnp.asarray(e.value)
         if isinstance(e, Var):
@@ -199,9 +231,13 @@ class PlanExecutor:
             if isinstance(arr, TiledMatrix):   # §5 fallback: unpack on read
                 arr = unpack(arr)
             # identity-traversal broadcast: statically marked eligible, and
-            # the runtime extents cover the array exactly (no gather)
+            # the runtime extents cover the array exactly (no gather).
+            # Padded (array_limits) and localized (row_offsets) arrays never
+            # qualify: their extents differ from the physical dim.
             bc_ok = e.broadcast_ok if isinstance(e, P.Gather) else True
             if bc_ok and len(e.idxs) == len(arr.shape) and \
+                    e.array not in ctx.row_offsets and \
+                    e.array not in ctx.array_limits and \
                     all(isinstance(ix, Var) and ix.name in binding
                         and binding[ix.name][0] == "range"
                         and isinstance(binding[ix.name][2], int)
@@ -216,29 +252,38 @@ class PlanExecutor:
                 for a in perm_src:
                     shape[ax.pos(a)] = ax.extent[a]
                 return jnp.reshape(a2, shape)
-            idxs = [self.eval(i, env, ax, binding, masks) for i in e.idxs]
+            idxs = [self.eval(i, env, ax, binding, masks, ctx)
+                    for i in e.idxs]
+            off = ctx.row_offsets.get(e.array)
+            lim = ctx.array_limits.get(e.array)
             clipped = []
-            for d, ix in zip(arr.shape, idxs):
+            for dim_i, (d, ix) in enumerate(zip(arr.shape, idxs)):
                 ix = jnp.asarray(ix, jnp.int32)
+                if dim_i == 0:
+                    if lim is not None:     # logical bound, global coords
+                        masks.append(ix < lim)
+                    if off is not None:     # localize to the shard's block
+                        ix = ix - off
                 masks.append((ix >= 0) & (ix < d))
                 clipped.append(jnp.clip(ix, 0, d - 1))
             if len(clipped) == 1:
                 return jnp.take(arr, clipped[0], axis=0)
             return arr[tuple(jnp.broadcast_arrays(*clipped))]
         if isinstance(e, BinOp):
-            return OPS[e.op](self.eval(e.lhs, env, ax, binding, masks),
-                             self.eval(e.rhs, env, ax, binding, masks))
+            return OPS[e.op](self.eval(e.lhs, env, ax, binding, masks, ctx),
+                             self.eval(e.rhs, env, ax, binding, masks, ctx))
         if isinstance(e, UnOp):
-            v = self.eval(e.e, env, ax, binding, masks)
+            v = self.eval(e.e, env, ax, binding, masks, ctx)
             return -v if e.op == "neg" else jnp.logical_not(v)
         if isinstance(e, Call):
-            return FNS[e.fn](*[self.eval(a, env, ax, binding, masks)
+            return FNS[e.fn](*[self.eval(a, env, ax, binding, masks, ctx)
                                for a in e.args])
         raise RejectionError(f"cannot execute expression {e}")
 
-    def _mask(self, conds, env, ax, binding, masks):
+    def _mask(self, conds, env, ax, binding, masks,
+              ctx: ExecContext = _EMPTY_CTX):
         for c in conds:
-            masks.append(self.eval(c, env, ax, binding, masks))
+            masks.append(self.eval(c, env, ax, binding, masks, ctx))
         if not masks:
             return None
         m = masks[0]
@@ -285,8 +330,8 @@ class PlanExecutor:
         ax, binding, conds, base = self.build_space(node.space, env, ctx)
         if node.key_axes is None:          # guarded scalar assignment
             masks = list(base)
-            val = self.eval(node.value, env, ax, binding, masks)
-            m = self._mask(conds, env, ax, binding, masks)
+            val = self.eval(node.value, env, ax, binding, masks, ctx)
+            m = self._mask(conds, env, ax, binding, masks, ctx)
             if m is not None:
                 old = env.get(node.dest, jnp.zeros_like(val))
                 return jnp.where(m, val, old)
@@ -294,8 +339,8 @@ class PlanExecutor:
 
         dest = env[node.dest]
         masks = list(base)
-        val = self.eval(node.value, env, ax, binding, masks)
-        m = self._mask(conds, env, ax, binding, masks)
+        val = self.eval(node.value, env, ax, binding, masks, ctx)
+        m = self._mask(conds, env, ax, binding, masks, ctx)
         key_axes = node.key_axes
         val = jnp.broadcast_to(val, ax.shape())
         perm = [ax.order.index(a) for a in key_axes]
@@ -304,28 +349,43 @@ class PlanExecutor:
             m = jnp.transpose(jnp.broadcast_to(m, ax.shape()), perm)
         los = [binding[a][2] for a in key_axes]
         exts = [ax.extent[a] for a in key_axes]
+        dest_off = ctx.row_offsets.get(node.dest)
+        dest_lim = ctx.array_limits.get(node.dest)
         static0 = all(isinstance(l, int) and l == 0 for l in los)
-        if tuple(exts) == dest.shape and static0 and m is None:
+        if tuple(exts) == dest.shape and static0 and m is None \
+                and dest_lim is None:
             return val.astype(dest.dtype)                 # full replace
         grids = list(jnp.meshgrid(
             *[los[i] + jnp.arange(exts[i]) for i in range(len(exts))],
             indexing="ij"))
-        if m is not None:
-            grids[0] = jnp.where(m, grids[0], dest.shape[0])  # drop
+        keep = m
+        if dest_lim is not None:          # pad rows: drop (logical bound)
+            ok = grids[0] < dest_lim
+            keep = ok if keep is None else (keep & ok)
+        if dest_off is not None:          # localize rows to the shard block
+            grids[0] = grids[0] - dest_off
+        if keep is not None:
+            grids[0] = jnp.where(keep, grids[0], dest.shape[0])  # drop
         return dest.at[tuple(grids)].set(val.astype(dest.dtype), mode="drop")
 
     def _exec_scatter(self, node: P.Scatter, env, ctx):
         ax, binding, conds, base = self.build_space(node.space, env, ctx)
         dest = env[node.dest]
         masks = list(base)
-        val = self.eval(node.value, env, ax, binding, masks)
-        m = self._mask(conds, env, ax, binding, masks)
+        val = self.eval(node.value, env, ax, binding, masks, ctx)
+        m = self._mask(conds, env, ax, binding, masks, ctx)
         shape = ax.shape()
         val = jnp.broadcast_to(val, shape)
         kk = [jnp.broadcast_to(jnp.asarray(
-            self.eval(k, env, ax, binding, masks), jnp.int32), shape)
+            self.eval(k, env, ax, binding, masks, ctx), jnp.int32), shape)
             for k in node.keys]
+        dest_off = ctx.row_offsets.get(node.dest)
+        dest_lim = ctx.array_limits.get(node.dest)
         ok = jnp.ones(shape, bool) if m is None else m
+        if dest_lim is not None:          # logical bound, global coords
+            ok &= kk[0] < dest_lim
+        if dest_off is not None:          # localize to the shard block
+            kk[0] = kk[0] - dest_off
         for k, d in zip(kk, dest.shape):
             ok &= (k >= 0) & (k < d)
         kk = [jnp.where(ok, k, d) for k, d in zip(kk, dest.shape)]
@@ -336,14 +396,16 @@ class PlanExecutor:
         ax, binding, conds, base = self.build_space(node.space, env, ctx)
         dest = env[node.dest]
         masks = list(base)
-        keys = [self.eval(k, env, ax, binding, masks) for k in node.keys]
-        val = self.eval(node.value, env, ax, binding, masks)
-        m = self._mask(conds, env, ax, binding, masks)
+        keys = [self.eval(k, env, ax, binding, masks, ctx)
+                for k in node.keys]
+        val = self.eval(node.value, env, ax, binding, masks, ctx)
+        m = self._mask(conds, env, ax, binding, masks, ctx)
         shape = ax.shape()
         val = jnp.broadcast_to(val, shape).reshape(-1)
         kk = [jnp.broadcast_to(jnp.asarray(k, jnp.int32), shape).reshape(-1)
               for k in keys]
-        flat, num = self._ravel_keys(kk, dest.shape)
+        flat, num = self._ravel_keys(kk, dest.shape,
+                                     limit0=ctx.array_limits.get(node.dest))
         if m is not None:
             flat = jnp.where(m.reshape(-1), flat, num)  # dropped
         if node.backend == "pallas":
@@ -357,21 +419,27 @@ class PlanExecutor:
         return COMBINE[node.op](dest,
                                 seg.reshape(dest.shape).astype(dest.dtype))
 
-    def _ravel_keys(self, kk, dshape):
+    def _ravel_keys(self, kk, dshape, limit0=None):
+        """Flatten index tuples against the PHYSICAL dims (strides must
+        match the later reshape); `limit0` bounds dim-0 keys by the logical
+        row count when the destination rows were padded."""
         num = 1
         for d in dshape:
             num *= d
         flat = jnp.zeros_like(kk[0])
         ok = jnp.ones_like(kk[0], dtype=bool)
-        for k, d in zip(kk, dshape):
-            ok &= (k >= 0) & (k < d)
+        for dim_i, (k, d) in enumerate(zip(kk, dshape)):
+            hi = limit0 if dim_i == 0 and limit0 is not None else d
+            ok &= (k >= 0) & (k < hi)
             flat = flat * d + jnp.clip(k, 0, d - 1)
         flat = jnp.where(ok, flat, num)
         return flat, num
 
     def _keyed_combine(self, dest, partial, key_axes, ax, binding, op,
-                       in_key_order):
-        """Scatter-⊕ a partial (indexed by the key axes) into dest."""
+                       in_key_order, dest_off=None, dest_lim=None):
+        """Scatter-⊕ a partial (indexed by the key axes) into dest.
+        `dest_off` localizes dim-0 rows to the shard's block; `dest_lim`
+        drops rows at or beyond the logical row count (padding)."""
         if not in_key_order:
             cur = [a for a in ax.order if a in key_axes]
             partial = jnp.transpose(partial,
@@ -379,10 +447,17 @@ class PlanExecutor:
         los = [binding[a][2] for a in key_axes]
         exts = [ax.extent[a] for a in key_axes]
         static0 = all(isinstance(l, int) and l == 0 for l in los)
-        if tuple(exts) == dest.shape and static0:
+        if tuple(exts) == dest.shape and static0 and dest_lim is None:
             return COMBINE[op](dest, partial.astype(dest.dtype))
+        rows = los[0] + jnp.arange(exts[0])
+        if dest_lim is not None:
+            ok = rows < dest_lim
+            local = rows if dest_off is None else rows - dest_off
+            rows = jnp.where(ok, local, dest.shape[0])
+        elif dest_off is not None:
+            rows = rows - dest_off
         grids = tuple(
-            (los[i] + jnp.arange(exts[i])).reshape(
+            (rows if i == 0 else los[i] + jnp.arange(exts[i])).reshape(
                 [-1 if j == i else 1 for j in range(len(exts))])
             for i in range(len(exts)))
         return _scatter_op(dest.at[grids], op)(
@@ -393,8 +468,8 @@ class PlanExecutor:
         dest = env[node.dest]
         contracted = node.contracted
         masks = list(base)
-        val = self.eval(node.value, env, ax, binding, masks)
-        m = self._mask(conds, env, ax, binding, masks)
+        val = self.eval(node.value, env, ax, binding, masks, ctx)
+        m = self._mask(conds, env, ax, binding, masks, ctx)
         val = jnp.broadcast_to(val, ax.shape())
         if m is not None:
             val = jnp.where(m, val, identity(node.op, val.dtype))
@@ -404,7 +479,9 @@ class PlanExecutor:
         else:
             partial = val
         return self._keyed_combine(dest, partial, node.key_axes, ax, binding,
-                                   node.op, in_key_order=False)
+                                   node.op, in_key_order=False,
+                                   dest_off=ctx.row_offsets.get(node.dest),
+                                   dest_lim=ctx.array_limits.get(node.dest))
 
     # ---- contractions (runtime guards; fall back on failure) ----
     def _sliced_operand(self, arr, faxes, ax, binding):
@@ -422,9 +499,11 @@ class PlanExecutor:
         return arr
 
     def _product_partial(self, ef: P.EinsumFactors, key_axes, ax, binding,
-                         env):
+                         env, ctx: ExecContext = _EMPTY_CTX):
         """jnp.einsum over the factor gathers; None when an offset/extent
-        guard fails (caller falls back)."""
+        guard fails (caller falls back).  Padded operands are safe here:
+        slices stay within the logical extents and the contraction monoid
+        is +, whose identity matches the zero pad rows."""
         from .tiles import TiledMatrix, unpack
         letters = {a: chr(ord('a') + i) for i, a in enumerate(ax.order)}
         specs = []
@@ -443,10 +522,11 @@ class PlanExecutor:
         out_spec = "".join(letters[a] for a in key_axes)
         res = jnp.einsum(",".join(specs) + "->" + out_spec, *operands)
         for o in ef.others:
-            res = res * self.eval(o, env, ax, binding, [])
+            res = res * self.eval(o, env, ax, binding, [], ctx)
         return res
 
-    def _terms_partial(self, node: P.EinsumContract, ax, binding, env):
+    def _terms_partial(self, node: P.EinsumContract, ax, binding, env,
+                       ctx: ExecContext = _EMPTY_CTX):
         key_axes = node.key_axes
         contracted = node.contracted
         key_exts = tuple(ax.extent[a] for a in ax.order if a in key_axes)
@@ -456,7 +536,7 @@ class PlanExecutor:
         for sign, term, ef in node.terms:
             if ef is None:      # term free of the contracted axes:
                 masks: list = []         # Σ_j c = |j|·c, no grid
-                v = self.eval(term, env, ax, binding, masks)
+                v = self.eval(term, env, ax, binding, masks, ctx)
                 if masks:
                     return None
                 mult = 1
@@ -470,12 +550,13 @@ class PlanExecutor:
                     part = jnp.broadcast_to(part, key_exts)
                 part = jnp.transpose(part, perm) * mult
             else:
-                part = self._product_partial(ef, key_axes, ax, binding, env)
+                part = self._product_partial(ef, key_axes, ax, binding, env,
+                                             ctx)
                 if part is None:
                     return None
             total = part * sign if total is None else total + part * sign
         for sc in node.scalars:
-            total = total * self.eval(sc, env, ax, binding, [])
+            total = total * self.eval(sc, env, ax, binding, [], ctx)
         return total
 
     def _exec_einsum(self, node: P.EinsumContract, env, ctx):
@@ -484,14 +565,16 @@ class PlanExecutor:
         if not base:       # padded-bag masks need the masked fallback path
             if node.product is not None:
                 partial = self._product_partial(node.product, node.key_axes,
-                                                ax, binding, env)
+                                                ax, binding, env, ctx)
             else:
-                partial = self._terms_partial(node, ax, binding, env)
+                partial = self._terms_partial(node, ax, binding, env, ctx)
         if partial is None:
             return self.run_node(node.fallback, env, ctx)
         dest = env[node.dest]
         return self._keyed_combine(dest, partial, node.key_axes, ax, binding,
-                                   "+", in_key_order=True)
+                                   "+", in_key_order=True,
+                                   dest_off=ctx.row_offsets.get(node.dest),
+                                   dest_lim=ctx.array_limits.get(node.dest))
 
     def _exec_tiled(self, node: P.TiledMatmul, env, ctx):
         from .tiles import TiledMatrix, matmul_tiled, unpack
@@ -516,25 +599,27 @@ class PlanExecutor:
             return self.run_node(ein, env, ctx)
         res = matmul_tiled(lhs, rhs)
         for o in ein.product.others:
-            res = res * self.eval(o, env, ax, binding, [])
+            res = res * self.eval(o, env, ax, binding, [], ctx)
         dest = env[node.dest]
         return self._keyed_combine(dest, res, ein.key_axes, ax, binding,
-                                   "+", in_key_order=True)
+                                   "+", in_key_order=True,
+                                   dest_off=ctx.row_offsets.get(node.dest),
+                                   dest_lim=ctx.array_limits.get(node.dest))
 
     # ---- scalar reductions ----
     def _total_reduce(self, node: P.ScalarReduce, env, ax, binding, conds,
-                      base):
+                      base, ctx: ExecContext = _EMPTY_CTX):
         masks: list = []
         if node.bool_any is not None and not base:
             # peephole: max/min over float(bool) → any/all (XLA-CPU f32
             # max-reduce is ~20x slower than a bool reduce; same result)
-            b = self.eval(node.bool_any, env, ax, binding, masks)
+            b = self.eval(node.bool_any, env, ax, binding, masks, ctx)
             if not masks and ax.order:
                 red = jnp.any if node.op == "max" else jnp.all
                 return red(jnp.asarray(b, bool)).astype(jnp.float32)
         masks = list(base)
-        val = self.eval(node.value, env, ax, binding, masks)
-        m = self._mask(conds, env, ax, binding, masks)
+        val = self.eval(node.value, env, ax, binding, masks, ctx)
+        m = self._mask(conds, env, ax, binding, masks, ctx)
         val = jnp.broadcast_to(val, ax.shape()) if ax.order else val
         if m is not None:
             val = jnp.where(m, val, identity(node.op,
@@ -543,7 +628,7 @@ class PlanExecutor:
 
     def _exec_scalar_reduce(self, node: P.ScalarReduce, env, ctx):
         ax, binding, conds, base = self.build_space(node.space, env, ctx)
-        total = self._total_reduce(node, env, ax, binding, conds, base)
+        total = self._total_reduce(node, env, ax, binding, conds, base, ctx)
         dest = env[node.dest]
         if node.point is not None:      # Rule 16: one-cell ⊕ update
             return _scatter_op(dest.at[node.point], node.op)(
@@ -558,7 +643,8 @@ class PlanExecutor:
         def cond_fn(c, _names=node.carry, _n=node):
             e2 = dict(env)
             e2.update(dict(zip(_names, c)))
-            return jnp.asarray(self.eval(_n.cond, e2, Axes(), {}, []), bool)
+            return jnp.asarray(
+                self.eval(_n.cond, e2, Axes(), {}, [], ctx), bool)
 
         def body_fn(c, _names=node.carry, _n=node):
             e2 = dict(env)
@@ -580,12 +666,15 @@ class PlanExecutor:
 
 class CompiledProgram:
     def __init__(self, prog: Program, target, optimize_contractions=True,
-                 use_kernels=False):
+                 use_kernels=False, infer_distributions=True):
         self.program = prog
         self.target = target
         self.config = PlanConfig(optimize_contractions=optimize_contractions,
-                                 use_kernels=use_kernels)
+                                 use_kernels=use_kernels,
+                                 infer_distributions=infer_distributions)
         self.plan = plan_program(target, prog, self.config)
+        from .dist_analysis import collect
+        self.dists = collect(self.plan)   # array → Dist (pass-8 annotations)
         self.executor = PlanExecutor(prog)
 
     def pretty_target(self) -> str:
@@ -598,8 +687,9 @@ class CompiledProgram:
 
     # -- public execution interface (distributed.py consumes this) --
     def execute(self, env: dict, *, bag_offsets=None, bag_limits=None,
-                nodes=None) -> None:
-        ctx = ExecContext(bag_offsets or {}, bag_limits or {})
+                array_limits=None, nodes=None) -> None:
+        ctx = ExecContext(bag_offsets or {}, bag_limits or {},
+                          array_limits=array_limits or {})
         self.executor.execute(self.plan if nodes is None else nodes, env, ctx)
 
     def prepare_env(self, inputs: dict) -> dict:
@@ -633,14 +723,18 @@ class CompiledProgram:
 
 def compile_program(fn_or_prog, *, restrictions=True,
                     optimize_contractions=True,
-                    use_kernels=False) -> CompiledProgram:
+                    use_kernels=False,
+                    infer_distributions=True) -> CompiledProgram:
     """Front door: loop program → restrictions check (Def. 3.1) →
     comprehension translation (Fig. 2) → pass pipeline (passes.py) →
     executable physical plan.  use_kernels=True routes +-group-bys through
-    the Pallas one-hot-MXU segment kernel (interpret-mode off-TPU)."""
+    the Pallas one-hot-MXU segment kernel (interpret-mode off-TPU);
+    infer_distributions=False pins every array to REP (replicated — the
+    pre-analysis distributed behaviour)."""
     prog = fn_or_prog if isinstance(fn_or_prog, Program) \
         else fn_or_prog.program
     if restrictions:
         check_restrictions(prog)
     target = translate(prog)
-    return CompiledProgram(prog, target, optimize_contractions, use_kernels)
+    return CompiledProgram(prog, target, optimize_contractions, use_kernels,
+                           infer_distributions)

@@ -26,11 +26,18 @@ contract (see DESIGN.md):
   7. update-fusion              consecutive reductions sharing an iteration
                                 space and touching disjoint state → Fused
                                 (one distributed collective round)
+  8. distribution-analysis      fixed-point inference of a per-array
+                                sharding (REP ≤ ONED_ROW ≤ TWOD_BLOCK) over
+                                the finished plan; annotation-only
+                                (dist_analysis.py, DESIGN.md §6)
 
 Passes 2-5 must run in this order: classification consumes rewritten reads,
 einsum consumes AxisReduce nodes, tiled-fusion consumes EinsumContract
 nodes.  Passes 6-7 are cleanups over the final operator choice and must run
-last (fusion would otherwise hide stores from the deadness scan).
+last among the transforms (fusion would otherwise hide stores from the
+deadness scan).  Pass 8 transforms nothing — it must see the FINAL operator
+choices (a Fused round places all its parts, an eliminated store constrains
+nothing), so it runs after everything else.
 """
 from __future__ import annotations
 
@@ -47,6 +54,7 @@ from .loop_ast import (BinOp, Call, Const, Index, Program, RejectionError,
 class PlanConfig:
     optimize_contractions: bool = True   # False = paper-faithful plans
     use_kernels: bool = False            # +-group-bys via Pallas segment kernel
+    infer_distributions: bool = True     # False = REP-everything annotations
 
 
 # ---------------------------------------------------------------------------
@@ -526,6 +534,16 @@ def pass_fuse_updates(nodes: list, prog, config) -> list:
 
 
 # ---------------------------------------------------------------------------
+# pass 8: distribution analysis (annotation-only; see dist_analysis.py)
+# ---------------------------------------------------------------------------
+
+def pass_distribution(nodes: list, prog, config) -> list:
+    from .dist_analysis import analyze
+    analyze(nodes, prog, config)
+    return nodes
+
+
+# ---------------------------------------------------------------------------
 # the pipeline
 # ---------------------------------------------------------------------------
 
@@ -536,6 +554,7 @@ PIPELINE = (
     ("tiled-fusion", pass_tiled_fusion),
     ("dead-store-elimination", pass_dead_stores),
     ("update-fusion", pass_fuse_updates),
+    ("distribution-analysis", pass_distribution),
 )
 
 

@@ -32,6 +32,17 @@ Runtime guards: extents and input representations (packed vs dense) are only
 known at run(); optimistic nodes (EinsumContract, TiledMatmul) therefore
 carry a `fallback` chain the executor walks when a guard fails.  A fallback
 never changes results, only the operator used.
+
+Every leaf node also carries a `shardings` annotation — written by the
+distribution-analysis pass (dist_analysis.py) after the pipeline — mapping
+each dense operand (destination first, then reads) to its inferred
+placement on a device mesh: ``REP`` (replicated), ``ONED_ROW(i)``
+(block-partitioned on dim 0, aligned with axis var `i` in this node),
+``ONED_ROW`` (partitioned, unaligned access here) or ``TWOD_BLOCK``
+(2-D block candidate; matmul operands).  `explain()` prints one
+`shardings:` line per node so the chosen distribution is part of the
+plan's observable contract; distributed.py consumes the same annotations
+to place arrays and pick collectives.
 """
 from __future__ import annotations
 
@@ -126,6 +137,7 @@ class MapExpr:
     dest: str
     value: Expr
     key_axes: Optional[tuple[str, ...]] = None
+    shardings: Optional[dict] = None   # dist_analysis annotation
 
     def describe(self) -> str:
         if self.key_axes is None:
@@ -143,6 +155,7 @@ class Scatter:
     dest: str
     keys: tuple[Expr, ...]
     value: Expr
+    shardings: Optional[dict] = None   # dist_analysis annotation
 
     def describe(self) -> str:
         return f"Scatter[{self.space.pretty()}] → {self.dest} (drop OOB)"
@@ -160,6 +173,7 @@ class SegmentReduce:
     op: str
     value: Expr
     backend: str = "scatter"     # "scatter" | "pallas"
+    shardings: Optional[dict] = None   # dist_analysis annotation
 
     def describe(self) -> str:
         return (f"SegmentReduce({self.op}, backend={self.backend})"
@@ -177,6 +191,7 @@ class AxisReduce:
     key_axes: tuple[str, ...]
     op: str
     value: Expr
+    shardings: Optional[dict] = None   # dist_analysis annotation
 
     @property
     def contracted(self) -> tuple[str, ...]:
@@ -202,6 +217,7 @@ class EinsumContract:
     scalars: tuple[Expr, ...] = ()        # axis-free factors (terms mode)
     terms: Optional[tuple] = None         # ((sign, Expr, EinsumFactors|None), ...)
     fallback: Optional[AxisReduce] = None
+    shardings: Optional[dict] = None      # dist_analysis annotation
 
     @property
     def op(self) -> str:
@@ -231,6 +247,7 @@ class TiledMatmul:
     reads: frozenset
     dest: str
     contract: EinsumContract
+    shardings: Optional[dict] = None   # dist_analysis annotation
 
     @property
     def op(self) -> str:
@@ -261,6 +278,7 @@ class ScalarReduce:
     value: Expr
     point: Optional[tuple[int, ...]] = None
     bool_any: Optional[Expr] = None  # peephole: max/min of float(bool) → any/all
+    shardings: Optional[dict] = None  # dist_analysis annotation
 
     def describe(self) -> str:
         tgt = self.dest if self.point is None else \
@@ -310,13 +328,6 @@ def dests_of(node: PlanNode) -> tuple[str, ...]:
     return (node.dest,)
 
 
-def ops_of(node: PlanNode) -> tuple[str, ...]:
-    """⊕ monoid per destination (reduce-type nodes only)."""
-    if isinstance(node, Fused):
-        return tuple(p.op for p in node.parts)
-    return (node.op,)
-
-
 def is_reduce(node: PlanNode) -> bool:
     return isinstance(node, REDUCE_NODES) or (
         isinstance(node, Fused)
@@ -351,6 +362,9 @@ def _node_lines(node: PlanNode, indent: int, tiled, out: list):
     out.append(line)
     if node.stmt is not None:
         out.append(f"{pre}    {pretty(node.stmt)}")
+    if getattr(node, "shardings", None):
+        out.append(f"{pre}    shardings: " + ", ".join(
+            f"{k}={v}" for k, v in node.shardings.items()))
 
 
 def explain(plan: list, name: str = "", tiled=()) -> str:

@@ -1,0 +1,93 @@
+"""Distribution-analysis unit tests (DESIGN.md §6): the fixed-point pass
+infers ONED_ROW for bag-joined/axis-aligned dense arrays, TWOD_BLOCK for
+pure matmul operands, and REP whenever a write shape the distributed
+executor cannot produce forces the meet to ⊥.  No mesh needed — the
+analysis is static."""
+from repro.core import compile_program, dim, loop_program, vector
+from repro.core.dist_analysis import Dist
+from repro.core.programs import ALL
+
+
+def dists(name, **kw):
+    return compile_program(ALL[name], **kw).dists
+
+
+def test_pagerank_dense_arrays_shard():
+    d = dists("pagerank")
+    # ranks, new ranks and out-degree counts all shard by vertex row —
+    # the acceptance bar for scaling past one device's memory
+    assert d["P"] == Dist.ONED_ROW
+    assert d["NP"] == Dist.ONED_ROW
+    assert d["C"] == Dist.ONED_ROW
+
+
+def test_matmul_operands_are_twod_candidates():
+    d = dists("matrix_multiplication")
+    assert d["M"] == Dist.TWOD_BLOCK      # pure matmul operands
+    assert d["N"] == Dist.TWOD_BLOCK
+    assert d["R"] == Dist.ONED_ROW        # also written by the zero-init
+
+
+def test_matrix_factorization_factors_shard():
+    d = dists("matrix_factorization_step")
+    assert all(v == Dist.ONED_ROW for v in d.values()), d
+    # Pp/Qp are matmul operands in pq's contraction but ALSO appear in the
+    # gradient updates: the read-side rebalance sweep caps them at ONED_ROW
+    assert d["Pp"] == Dist.ONED_ROW
+    assert d["Qp"] == Dist.ONED_ROW
+
+
+def test_kmeans_per_point_arrays_shard():
+    d = dists("kmeans_step")
+    for name in ("D", "MinD", "Cl"):      # bag-joined dense writes
+        assert d[name] == Dist.ONED_ROW, (name, d[name])
+
+
+def test_strided_store_forces_rep():
+    @loop_program
+    def strided(V: vector, W: vector, n: dim):
+        for i in range(0, n):
+            W[2 * i] = V[i]
+
+    d = compile_program(strided).dists
+    # computed scatter keys cross shard boundaries: the write meets to ⊥
+    assert d["W"] == Dist.REP
+    assert d["V"] == Dist.ONED_ROW        # read-only operand still shards
+
+
+def test_nonzero_range_base_forces_rep():
+    @loop_program
+    def shifted(V: vector, W: vector, n: dim):
+        for i in range(1, n):
+            W[i] = V[i]
+
+    d = compile_program(shifted).dists
+    # rows-from-1 do not tile as contiguous blocks from row 0
+    assert d["W"] == Dist.REP
+
+
+def test_infer_distributions_off_is_rep_everything():
+    d = dists("pagerank", infer_distributions=False)
+    assert set(d.values()) == {Dist.REP}  # the guaranteed ⊥ fallback
+
+
+def test_seqloop_carried_arrays_have_one_stable_sharding():
+    cp = compile_program(ALL["pagerank"])
+    from repro.core import plan as P
+    from repro.core.dist_analysis import leaf_nodes
+    loop = next(n for n in cp.plan if isinstance(n, P.SeqLoop))
+    seen = {}
+    for n in leaf_nodes(loop.body):
+        for name, sh in (n.shardings or {}).items():
+            assert seen.setdefault(name, sh.dist) == sh.dist, \
+                f"{name} changes distribution across the loop body"
+    assert seen["P"] == Dist.ONED_ROW     # carried AND sharded
+
+
+def test_annotations_cover_every_dense_operand():
+    cp = compile_program(ALL["matrix_factorization_step"])
+    from repro.core.dist_analysis import leaf_nodes
+    for n in leaf_nodes(cp.plan):
+        assert n.shardings, f"missing shardings on {n.describe()}"
+        assert n.dest in n.shardings      # destination always listed first
+        assert next(iter(n.shardings)) == n.dest

@@ -139,3 +139,44 @@ def test_distributed_consumes_public_plan_interface():
     src = inspect.getsource(dist)
     assert "_StmtLowerer" not in src
     assert "bag_offset" not in src.replace("bag_offsets", "")
+
+
+# ---------------------------------------------------------------------------
+# sharding annotations (distribution analysis, DESIGN.md §6): the inferred
+# placement per operand is part of explain()'s documented output
+# ---------------------------------------------------------------------------
+
+def test_pagerank_explains_oned_row_shardings():
+    text = compile_program(ALL["pagerank"]).explain()
+    # the rank update P[i] = (1-b)/N + b*NP[i]: destination and read both
+    # shard by vertex row, aligned with axis var i (no collective needed)
+    assert "shardings: P=ONED_ROW(i), NP=ONED_ROW(i)" in text
+    # the shuffle NP[d] += P[s]/C[s]: destination sharded but written at
+    # computed keys (unaligned → psum_scatter), reads cross shards
+    assert "shardings: NP=ONED_ROW, C=ONED_ROW, P=ONED_ROW" in text
+    assert "=REP" not in text              # nothing replicates in pagerank
+
+
+def test_matmul_explains_twod_block_operands():
+    text = compile_program(ALL["matrix_multiplication"]).explain()
+    assert "M=TWOD_BLOCK" in text          # pure matmul operands
+    assert "N=TWOD_BLOCK" in text
+    assert "R=ONED_ROW(i)" in text         # dest also has a non-matmul use
+
+
+def test_rep_fallback_explains_rep():
+    text = compile_program(ALL["pagerank"],
+                           infer_distributions=False).explain()
+    assert "ONED_ROW" not in text          # ⊥ everywhere when disabled
+    assert "P=REP" in text
+
+
+def test_scattered_write_explains_rep():
+    @loop_program
+    def strided(V: vector, W: vector, n: dim):
+        for i in range(0, n):
+            W[2 * i] = V[i]
+
+    text = compile_program(strided).explain()
+    assert "W=REP" in text                 # computed keys cross shards
+    assert "V=ONED_ROW" in text            # read-only operand still shards
