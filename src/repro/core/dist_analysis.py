@@ -170,6 +170,83 @@ def _static_zero(e) -> bool:
     return isinstance(e, Const) and e.value == 0
 
 
+# ---------------------------------------------------------------------------
+# bounds certificates for per-shard slices (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def _contract_groups(node):
+    """The node's recognized contraction factor groups ((factors,
+    factor_axes) pairs), or None when it carries no product certificate."""
+    if isinstance(node, P.TiledMatmul):
+        node = node.contract
+    if isinstance(node, P.EinsumContract):
+        if node.product is not None:
+            return [(node.product.factors, node.product.factor_axes)]
+        if node.terms:
+            out = [(ef.factors, ef.factor_axes)
+                   for _s, _t, ef, _f in node.terms if ef is not None]
+            return out or None
+        return None
+    if isinstance(node, P.AxisReduce) and node.product is not None:
+        return [(node.product.factors, node.product.factor_axes)]
+    return None
+
+
+def shard_slice_certificates(node, axis: str, local: frozenset):
+    """Structural bounds certificates for running `node`'s contraction as a
+    per-shard jnp.einsum inside a shard_map round over `axis`.  For every
+    factor, each occurrence of the round axis must be provably sliceable
+    without relying on lax.dynamic_slice's silent clamping:
+
+      "local"   the factor is an axis-aligned local block (every read
+                leading-indexed by the round axis, rows tiling like the
+                axis): its dim-0 block IS the shard's window, slice at 0.
+      "window"  the factor stays global on the shard: a dynamic_slice
+                window [offset, offset+extent) whose bound offset+extent ≤
+                padded-global-extent is checked against the physical dim
+                at trace time (zero-padding the + identity when shorter).
+      "static"  the round axis does not index this factor; plain static
+                slicing applies.
+
+    Returns {array: certificate}; None when some factor admits no
+    certificate (or an unrecognized term still needs a gather grid) — the
+    executor will then fall back to the masked dense-grid path.  The
+    numeric halves of these certificates (row counts, padded extents) are
+    re-checked by lower._sliced_operand at trace time; this function is
+    the static contract distributed.py consults and explain_rounds()
+    prints."""
+    groups = _contract_groups(node)
+    if groups is None:
+        return None
+    inner = node.contract if isinstance(node, P.TiledMatmul) else node
+    if isinstance(inner, P.EinsumContract) and inner.terms:
+        for _s, term, ef, _f in inner.terms:
+            acc: dict = {}
+            _walk_gathers(term, acc)
+            if ef is None and acc:
+                return None     # unrecognized term needs the gather grid
+    bagvars = {a.var for a in node.space.axes if a.kind == "bag"}
+    cert: dict = {}
+    for factors, factor_axes in groups:
+        for f, faxes in zip(factors, factor_axes):
+            kind = "static"
+            for dim_i, axn in enumerate(faxes):
+                if axn != axis and axn not in bagvars:
+                    continue
+                if dim_i == 0 and f.array in local:
+                    kind = "local"
+                elif axn == axis and f.array not in local:
+                    kind = "window"
+                else:
+                    return None
+            prev = cert.get(f.array)
+            if prev is not None and prev != kind and "static" not in \
+                    (prev, kind):
+                return None     # conflicting requirements across reads
+            cert[f.array] = kind if prev in (None, "static") else prev
+    return cert
+
+
 def round_axis(node) -> Optional[str]:
     """The axis a shard_map round for THIS node would split: the single bag
     axis when the space is bag-driven, else the leading destination key

@@ -36,6 +36,18 @@ parameters (lower.ExecContext), not lowerer state.
   crosses shards.  A `Fused` node still runs all its parts in ONE
   shard_map round (mixed aligned/unaligned parts allowed).
 
+  Inside an aligned reduce round the executor keeps the MXU contraction
+  path PER SHARD: aligned operands are their local blocks (slice at local
+  0), replicated ones a bounds-certified lax.dynamic_slice window — the
+  certificates come from the distribution analysis
+  (dist_analysis.shard_slice_certificates) plus the padded-extent bound in
+  ExecContext.axis_overrides, so a dynamic slice is only ever emitted when
+  it provably cannot clamp.  `explain_rounds()` prints, per node, the
+  round strategy, the slice certificates, and the per-shard operator the
+  executor actually traced (e.g. ``mxu-einsum`` vs ``fallback:dense-grid``
+  — the observable contract that generated rounds run jnp.einsum, not the
+  dense iteration grid).
+
 * ``gspmd``: the single-device plan executed on sharded inputs; XLA's
   SPMD partitioner inserts the collectives.  Works for every program,
   including range-driven contractions (matmul → partitioned einsum).
@@ -58,7 +70,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from . import plan
-from .dist_analysis import Dist, aligned_reads, leading_key_var, round_axis
+from .dist_analysis import (Dist, aligned_reads, leading_key_var,
+                            round_axis, shard_slice_certificates)
 from .lower import COMBINE, CompiledProgram, ExecContext, identity
 
 _STORE_NODES = (plan.MapExpr, plan.Scatter)
@@ -85,6 +98,17 @@ class DistributedProgram:
         # SeqLoop iterations and repeated run() calls reuse the traced
         # round instead of paying trace+compile every time
         self._round_cache: dict = {}
+        # id(node) → human-readable round strategy of the LAST run(), and
+        # id(leaf) → the per-shard materialization that round used.  Both
+        # refreshed on every node execution — cache-hit rounds restore the
+        # snapshot taken when their round was traced (_round_notes), so
+        # explain_rounds() stays accurate even when classification changed
+        # between runs or a single-device run touched the shared executor
+        # in between.
+        self._strategy: dict = {}
+        self._decisions: dict = {}
+        self._strategy_by_key: dict = {}
+        self._round_notes: dict = {}
         # env-independent node facts (round axis, aligned reads, gather
         # names): expression trees are walked once per node, not once per
         # SeqLoop iteration
@@ -203,9 +227,13 @@ class DistributedProgram:
             if lo != 0 or hi <= 0:
                 return None
             axis_rows = hi + (-hi) % self.dp_n
-            # no mask needed when the rows tile evenly (limit=None)
+            # (block, limit, total): no mask needed when the rows tile
+            # evenly (limit=None); `total` = padded global extent, the
+            # static bound certifying per-shard dynamic slices of
+            # replicated operands (lower._sliced_operand, DESIGN.md §7)
             rng = (axis_rows // self.dp_n,
-                   hi if axis_rows != hi else None)
+                   hi if axis_rows != hi else None,
+                   axis_rows)
 
         def dest_aligned(p):
             return (axis is not None
@@ -254,8 +282,10 @@ class DistributedProgram:
                 else None
             if spec is None:
                 # replicated execution (identical result on all shards)
+                self._strategy[id(node)] = "replicated"
                 cp.execute(env, bag_limits=limits,
                            array_limits=array_limits, nodes=[node])
+                self._decisions.update(self._part_notes(node))
                 continue
             self._run_round(node, spec, env, limits, array_limits)
 
@@ -316,7 +346,37 @@ class DistributedProgram:
         fn = self._round_cache.get(cache_key)
         if fn is not None:
             results = fn(*args)
+            # restore the trace-time snapshot: the cached round re-runs
+            # exactly what was traced, whatever happened in between
+            self._strategy[id(node)] = self._strategy_by_key[cache_key]
+            self._decisions.update(self._round_notes[cache_key])
             return self._apply(parts, kinds, results, env)
+
+        # trace-time only (cache hits skip it, like the trace itself):
+        # record the round strategy + slice certificates for explain_rounds
+        desc = []
+        for p, k in zip(parts, kinds):
+            if k == "reduce":
+                coll = "psum_scatter" if dest_oned[p.dest] else "psum"
+                desc.append(f"reduce({coll})→{p.dest}")
+            else:
+                desc.append(f"{k}→{p.dest}")   # store/aligned: no collective
+        extras = []
+        if gathered:
+            extras.append("all_gather: " + ",".join(gathered))
+        if local:
+            extras.append("local blocks: " + ",".join(sorted(local)))
+        for p, k in zip(parts, kinds):
+            if k == "aligned":   # per-shard contraction: print the static
+                cert = shard_slice_certificates(   # bounds certificates
+                    p, axis, frozenset(local))
+                extras.append(
+                    f"slice-certs[{p.dest}]: " + (", ".join(
+                        f"{a}={c}" for a, c in sorted(cert.items()))
+                        if cert else "none (dense grid)"))
+        self._strategy[id(node)] = (f"{' + '.join(desc)} over {axis}"
+                                    + ("; " + "; ".join(extras)
+                                       if extras else ""))
 
         def local_fn(*vals, _parts=parts, _kinds=kinds,
                      _names=tuple(names), _stores=tuple(store_dests),
@@ -338,25 +398,35 @@ class DistributedProgram:
             row_offs = {n: shard * e2[n].shape[0] for n in _local}
             axis_ov = {}
             if _rng is not None:
-                blk, hi = _rng
-                axis_ov[_axis] = (shard * blk, blk, hi)
+                blk, lim, total = _rng
+                axis_ov[_axis] = (shard * blk, blk, lim, total)
             outs = []
             for p, k, shp, dt in zip(_parts, _kinds, _shapes, _dtypes):
                 ro = dict(row_offs)
+                # alignment certificates: localized reads tile exactly like
+                # the round axis (checked in _round_spec), and store/aligned
+                # destinations by construction — their local dim-0 block IS
+                # the axis window, so per-shard slices start at local 0
+                cert = set(_local)
                 if k == "store":
                     ro[p.dest] = shard * e2[p.dest].shape[0]
-                    ctx = ExecContext(offs, _lims, ro, _alims, axis_ov)
+                    cert.add(p.dest)
+                    ctx = ExecContext(offs, _lims, ro, _alims, axis_ov,
+                                      frozenset(cert))
                     outs.append(cp.executor.run_node(p, e2, ctx))
                 elif k == "aligned":
                     blk0 = shp[0] // self.dp_n
                     e2[p.dest] = jnp.full((blk0,) + tuple(shp[1:]),
                                           identity(p.op, dt))
                     ro[p.dest] = shard * blk0
-                    ctx = ExecContext(offs, _lims, ro, _alims, axis_ov)
+                    cert.add(p.dest)
+                    ctx = ExecContext(offs, _lims, ro, _alims, axis_ov,
+                                      frozenset(cert))
                     outs.append(cp.executor.run_node(p, e2, ctx))
                 else:
                     e2[p.dest] = jnp.full(shp, identity(p.op, dt))
-                    ctx = ExecContext(offs, _lims, ro, _alims, axis_ov)
+                    ctx = ExecContext(offs, _lims, ro, _alims, axis_ov,
+                                      frozenset(cert))
                     part_res = cp.executor.run_node(p, e2, ctx)
                     outs.append(self._combine_shard(
                         part_res, p.op, shard, dest_oned[p.dest]))
@@ -366,7 +436,26 @@ class DistributedProgram:
                                in_specs=tuple(in_specs),
                                out_specs=out_specs))
         self._round_cache[cache_key] = fn
-        self._apply(parts, kinds, fn(*args), env)
+        results = fn(*args)              # traces: executor notes decisions
+        notes = self._part_notes(node)
+        self._round_notes[cache_key] = notes
+        self._decisions.update(notes)
+        self._strategy_by_key[cache_key] = self._strategy[id(node)]
+        self._apply(parts, kinds, results, env)
+
+    def _part_notes(self, node) -> dict:
+        """Snapshot the executor's materialization decisions for the
+        node's leaves, as they stand right after this node executed."""
+        notes = {}
+        parts = node.parts if isinstance(node, plan.Fused) else [node]
+        for p in parts:
+            d = self.cp.executor.decisions.get(id(p))
+            if d is None and isinstance(p, plan.TiledMatmul):
+                # dense lhs resolved to the einsum underneath
+                d = self.cp.executor.decisions.get(id(p.contract))
+            if d is not None:
+                notes[id(p)] = d
+        return notes
 
     @staticmethod
     def _apply(parts, kinds, results, env):
@@ -377,6 +466,36 @@ class DistributedProgram:
                 env[p.dest] = res
             else:
                 env[p.dest] = COMBINE[p.op](jnp.asarray(env[p.dest]), res)
+
+    # ------------------------- explain -------------------------
+    def explain_rounds(self) -> str:
+        """Spark-EXPLAIN-style dump of the round strategy chosen for every
+        plan node in the LAST run() — aligned store / aligned reduce /
+        unaligned reduce (with its collective) / replicated — together with
+        the per-shard materialization the executor actually traced for it
+        (e.g. ``einsum`` vs ``fallback:dense-grid``).  Classification
+        depends on runtime row counts, so call after run()."""
+        out = [f"== distributed rounds: {self.cp.program.name} "
+               f"({self.dp_n} shards over {self.dp}, mode={self.mode}) =="]
+        self._round_lines(self.cp.plan, 0, out)
+        return "\n".join(out)
+
+    def _round_lines(self, nodes, indent, out):
+        pre = "  " * indent
+        for node in nodes:
+            if isinstance(node, plan.SeqLoop):
+                out.append(f"{pre}{node.describe()}")
+                self._round_lines(node.body, indent + 1, out)
+                continue
+            out.append(f"{pre}{node.describe()}")
+            strat = self._strategy.get(id(node))
+            if strat is not None:
+                out.append(f"{pre}    round: {strat}")
+            parts = node.parts if isinstance(node, plan.Fused) else [node]
+            for p in parts:
+                d = self._decisions.get(id(p))
+                if d is not None:
+                    out.append(f"{pre}    per-shard[{p.dest}]: {d}")
 
     # ------------------------- entry -------------------------
     def run(self, inputs: dict) -> dict:

@@ -12,12 +12,23 @@ Node → JAX mapping:
 
   MapExpr         broadcasted value over the iteration space; full replace
                   or meshgrid .at[].set with drop semantics
+  DenseMap        dense fast path: ONE vectorized jnp expression over whole
+                  arrays / per-shard blocks — no index grids, gathers,
+                  masks or scatters (guard: extents cover the destination
+                  exactly) — else the general MapExpr path
   Scatter         .at[].set at computed keys, OOB rows dropped
-  SegmentReduce   scatter-⊕ into the flattened destination index space, or
-                  the Pallas one-hot-MXU segment kernel (backend="pallas")
-  AxisReduce      ⊕-reduce over contracted axes (Rule 17: no shuffle)
-  EinsumContract  jnp.einsum over sliced operands (guard: static offsets
-                  and extents fit) — else its AxisReduce fallback
+  SegmentReduce   scatter-⊕ straight into the destination with native drop
+                  semantics (no identity segment array, no index
+                  flattening), or the Pallas one-hot-MXU segment kernel
+                  (backend="pallas")
+  AxisReduce      ⊕-reduce over contracted axes (Rule 17: no shuffle); a
+                  `product` certificate contracts via jnp.einsum instead of
+                  the dense grid (same operator, MXU materialization)
+  EinsumContract  jnp.einsum over sliced operands (guard: offsets static
+                  OR certified per-shard — aligned local blocks slice at
+                  0, replicated operands via bounds-proven dynamic_slice;
+                  pad limits only on the leading key axis) — else its
+                  AxisReduce fallback
   TiledMatmul     block-sparse Pallas tile_matmul on the §5 packed lhs
                   (guard: lhs arrives as TiledMatrix) — else einsum
   ScalarReduce    total ⊕-reduce (+ any/all peephole for max/min of
@@ -130,16 +141,31 @@ class ExecContext:
                       row ≥ limit are masked and writes dropped, so pad
                       rows can never change a result (paper §3.4 empty-bag
                       semantics against the LOGICAL bound)
-      axis_overrides  range-axis var → (offset, extent, limit): the round
-                      localizes the axis to the shard's row block exactly
-                      like a sharded bag axis (offset globalizes the index
-                      var, rows beyond `limit` are masked out)
+      axis_overrides  range-axis var → (offset, extent, limit, total): the
+                      round localizes the axis to the shard's row block
+                      exactly like a sharded bag axis (offset globalizes
+                      the index var, rows beyond `limit` are masked out).
+                      `total` is the STATIC padded global extent
+                      (shards × extent): the bounds certificate for slicing
+                      a replicated operand per shard — offset + extent ≤
+                      total always, so when total ≤ the operand's physical
+                      dim a lax.dynamic_slice can never clamp (DESIGN.md
+                      §7).
+      aligned         alignment certificates: names whose dim-0 LOCAL
+                      block is exactly the round axis' override window
+                      ([offset, offset+extent)).  distributed.py issues
+                      one only when the distribution analysis proved every
+                      read leading-indexed by the round axis AND the
+                      physical rows tile exactly like the axis, so the
+                      executor may treat the traced window start as a
+                      static local 0.
     """
     bag_offsets: dict = field(default_factory=dict)
     bag_limits: dict = field(default_factory=dict)
     row_offsets: dict = field(default_factory=dict)
     array_limits: dict = field(default_factory=dict)
     axis_overrides: dict = field(default_factory=dict)
+    aligned: frozenset = frozenset()
 
 
 _EMPTY_CTX = ExecContext()
@@ -152,6 +178,14 @@ _EMPTY_CTX = ExecContext()
 class PlanExecutor:
     def __init__(self, prog: Program):
         self.prog = prog
+        # id(node) → the materialization the executor last chose for it
+        # ("einsum", "mxu-einsum", "dense-store", "dense-grid", …).  Written
+        # at trace time; DistributedProgram.explain_rounds() reads it to
+        # report the ACTUAL per-shard operator of each compiled round.
+        self.decisions: dict = {}
+
+    def note(self, node, tag: str) -> None:
+        self.decisions[id(node)] = tag
 
     # ---- static scalars (dims / range bounds) ----
     def static_int(self, e, env) -> int:
@@ -178,7 +212,7 @@ class PlanExecutor:
             if a.kind == "range":
                 ov = ctx.axis_overrides.get(a.var)
                 if ov is not None:      # localized to the shard's row block
-                    off, ext, _lim = ov
+                    off, ext, _lim, _tot = ov
                     ax.add(a.var, ext)
                     binding[a.var] = ("range", a.var, off)
                     continue
@@ -198,7 +232,7 @@ class PlanExecutor:
             if a.kind == "range":
                 ov = ctx.axis_overrides.get(a.var)
                 if ov is not None and ov[2] is not None:
-                    off, ext, lim = ov    # mask rows ≥ the logical extent
+                    off, ext, lim, _tot = ov  # mask rows ≥ the logical extent
                     base_masks.append(ax.expand(
                         (off + jnp.arange(ext)) < lim, a.var))
                 continue
@@ -307,6 +341,12 @@ class PlanExecutor:
                 env[node.dest] = self.run_node(node, env, ctx)
 
     def run_node(self, node, env, ctx: ExecContext = _EMPTY_CTX):
+        if isinstance(node, P.DenseMap):
+            res = self._exec_dense_map(node, env, ctx)
+            if res is not None:
+                return res
+            self.note(node, "fallback:general-store")
+            return self._exec_map(node, env, ctx)
         if isinstance(node, P.MapExpr):
             return self._exec_map(node, env, ctx)
         if isinstance(node, P.Scatter):
@@ -326,6 +366,85 @@ class PlanExecutor:
         raise RejectionError(f"cannot execute plan node {node}")
 
     # ---- stores ----
+    def _eval_dense(self, e, key_axes, ax, binding, env, ctx):
+        """Whole-array evaluation of a dense-fastpath value: identity
+        gathers resolve to the operand (sliced per shard under the bounds
+        certificates of `_sliced_operand`), scalars broadcast.  None when a
+        guard fails (caller takes the general grid path)."""
+        if isinstance(e, Const):
+            return jnp.asarray(e.value)
+        if isinstance(e, Var):
+            return jnp.asarray(env[e.name])
+        if isinstance(e, (P.Gather, Get)):
+            arr = env[e.array]
+            from .tiles import TiledMatrix, unpack
+            if isinstance(arr, TiledMatrix):
+                arr = unpack(arr)
+            if len(arr.shape) != len(key_axes):
+                return None
+            # pad_ok=False: a store must DROP out-of-range writes (keep the
+            # old destination), which zero-padding cannot emulate
+            return self._sliced_operand(arr, e.array, key_axes, ax,
+                                        binding, ctx, pad_ok=False)
+        if isinstance(e, BinOp):
+            lhs = self._eval_dense(e.lhs, key_axes, ax, binding, env, ctx)
+            rhs = self._eval_dense(e.rhs, key_axes, ax, binding, env, ctx)
+            if lhs is None or rhs is None:
+                return None
+            return OPS[e.op](lhs, rhs)
+        if isinstance(e, UnOp):
+            v = self._eval_dense(e.e, key_axes, ax, binding, env, ctx)
+            if v is None:
+                return None
+            return -v if e.op == "neg" else jnp.logical_not(v)
+        if isinstance(e, Call):
+            args = [self._eval_dense(a, key_axes, ax, binding, env, ctx)
+                    for a in e.args]
+            if any(a is None for a in args):
+                return None
+            return FNS[e.fn](*args)
+        return None
+
+    def _exec_dense_map(self, node: P.DenseMap, env, ctx):
+        """DenseMap fast path: the pass proved identity indexing (keys =
+        axes, identity gathers only, no conditions); verify at runtime
+        that the extents cover the destination exactly, then emit ONE
+        vectorized jnp expression — no index grids, no gather/scatter, no
+        masks.  Per shard, aligned operands are their local blocks and
+        replicated ones a bounds-certified dynamic slice; rows beyond the
+        logical limit keep the destination's (zero) pad values.  Returns
+        None when a guard fails (caller: general MapExpr path)."""
+        from .tiles import TiledMatrix
+        dest = env[node.dest]
+        if isinstance(dest, TiledMatrix):
+            return None
+        ax, binding, conds, base = self.build_space(node.space, env, ctx)
+        lim = None
+        for pos, a in enumerate(node.space.axes):
+            ov = ctx.axis_overrides.get(a.var)
+            if ov is not None:
+                if pos != 0:     # only the round axis may be localized
+                    return None
+                lim = ov[2]
+        if tuple(ax.shape()) != tuple(dest.shape):
+            return None          # space must cover the dest exactly
+        if ctx.array_limits.get(node.dest) is not None \
+                and node.dest not in ctx.aligned:
+            return None          # padded global dest needs the drop path
+        val = self._eval_dense(node.value, node.key_axes, ax, binding, env,
+                               ctx)
+        if val is None:
+            return None
+        val = jnp.broadcast_to(jnp.asarray(val), ax.shape())
+        val = val.astype(dest.dtype)
+        if lim is not None:      # keep (zero) pad rows beyond the limit
+            ov = ctx.axis_overrides[node.space.axes[0].var]
+            keep = (ov[0] + jnp.arange(ov[1])) < lim
+            keep = keep.reshape((-1,) + (1,) * (val.ndim - 1))
+            val = jnp.where(keep, val, dest)
+        self.note(node, "dense-store")
+        return val
+
     def _exec_map(self, node: P.MapExpr, env, ctx):
         ax, binding, conds, base = self.build_space(node.space, env, ctx)
         if node.key_axes is None:          # guarded scalar assignment
@@ -401,23 +520,39 @@ class PlanExecutor:
         val = self.eval(node.value, env, ax, binding, masks, ctx)
         m = self._mask(conds, env, ax, binding, masks, ctx)
         shape = ax.shape()
-        val = jnp.broadcast_to(val, shape).reshape(-1)
-        kk = [jnp.broadcast_to(jnp.asarray(k, jnp.int32), shape).reshape(-1)
+        val = jnp.broadcast_to(val, shape)
+        kk = [jnp.broadcast_to(jnp.asarray(k, jnp.int32), shape)
               for k in keys]
-        flat, num = self._ravel_keys(kk, dest.shape,
-                                     limit0=ctx.array_limits.get(node.dest))
-        if m is not None:
-            flat = jnp.where(m.reshape(-1), flat, num)  # dropped
+        lim0 = ctx.array_limits.get(node.dest)
         if node.backend == "pallas":
             # Pallas one-hot-MXU segment kernel as the group-by backend
+            flat, num = self._ravel_keys([k.reshape(-1) for k in kk],
+                                         dest.shape, limit0=lim0)
+            if m is not None:
+                flat = jnp.where(m.reshape(-1), flat, num)  # dropped
             from ..kernels import ops as kops
-            seg = kops.segment_sum(flat, val[:, None].astype(jnp.float32),
-                                   num)[:, 0]
-        else:
-            seg = jnp.full((num,), identity(node.op, val.dtype), val.dtype)
-            seg = _scatter_op(seg.at[flat], node.op)(val, mode="drop")
-        return COMBINE[node.op](dest,
-                                seg.reshape(dest.shape).astype(dest.dtype))
+            seg = kops.segment_sum(flat, val.reshape(-1)[:, None]
+                                   .astype(jnp.float32), num)[:, 0]
+            return COMBINE[node.op](
+                dest, seg.reshape(dest.shape).astype(dest.dtype))
+        # dense fast path: scatter-⊕ straight into the destination with
+        # native drop semantics — no identity-filled segment array, no
+        # index flattening.  The scatter's own UPPER bounds check is the
+        # paper's §3.4 OOB-write-drops semantics; negative keys need an
+        # explicit sentinel (jax normalizes them to end-relative indices
+        # BEFORE the mode="drop" check), as do the logical dim-0 bound
+        # (padded rows) and condition masks.
+        drop = None
+        for k in kk:
+            neg = k < 0
+            drop = neg if drop is None else (drop | neg)
+        if lim0 is not None:
+            drop = drop | (kk[0] >= lim0)
+        if m is not None:
+            drop = drop | jnp.logical_not(m)
+        kk[0] = jnp.where(drop, dest.shape[0], kk[0])
+        return _scatter_op(dest.at[tuple(kk)], node.op)(
+            val.astype(dest.dtype), mode="drop")
 
     def _ravel_keys(self, kk, dshape, limit0=None):
         """Flatten index tuples against the PHYSICAL dims (strides must
@@ -436,7 +571,8 @@ class PlanExecutor:
         return flat, num
 
     def _keyed_combine(self, dest, partial, key_axes, ax, binding, op,
-                       in_key_order, dest_off=None, dest_lim=None):
+                       in_key_order, dest_off=None, dest_lim=None,
+                       dest_name=None, ctx: ExecContext = _EMPTY_CTX):
         """Scatter-⊕ a partial (indexed by the key axes) into dest.
         `dest_off` localizes dim-0 rows to the shard's block; `dest_lim`
         drops rows at or beyond the logical row count (padding)."""
@@ -446,6 +582,18 @@ class PlanExecutor:
                                     [cur.index(a) for a in key_axes])
         los = [binding[a][2] for a in key_axes]
         exts = [ax.extent[a] for a in key_axes]
+        # alignment certificate: the destination's local block IS the round
+        # axis' window, so the traced window start is local row 0.  Rows
+        # beyond the logical limit carry the ⊕ identity in the partial
+        # (masked upstream), so the full-block combine leaves pad rows
+        # untouched — no dynamic scatter inside the shard.
+        if dest_name is not None and dest_name in ctx.aligned and key_axes \
+                and key_axes[0] in ctx.axis_overrides \
+                and not isinstance(los[0], int) \
+                and exts[0] == dest.shape[0]:
+            los[0] = 0
+            dest_off = None
+            dest_lim = None
         static0 = all(isinstance(l, int) and l == 0 for l in los)
         if tuple(exts) == dest.shape and static0 and dest_lim is None:
             return COMBINE[op](dest, partial.astype(dest.dtype))
@@ -467,6 +615,25 @@ class PlanExecutor:
         ax, binding, conds, base = self.build_space(node.space, env, ctx)
         dest = env[node.dest]
         contracted = node.contracted
+        # dense fast path (pass: dense-fastpath): the value is a certified
+        # +-product of gathers — contract on the MXU via jnp.einsum instead
+        # of materializing the dense iteration grid.  The plan-level
+        # operator stays AxisReduce; only the materialization changes.
+        if node.product is not None and not conds \
+                and self._mxu_masks_ok(node.space, node.key_axes, ctx):
+            partial = self._product_partial(node.product, node.key_axes, ax,
+                                            binding, env, ctx)
+            if partial is not None:
+                partial = self._limit_mask_partial(partial, node.key_axes,
+                                                   ctx)
+                self.note(node, "mxu-einsum")
+                return self._keyed_combine(
+                    dest, partial, node.key_axes, ax, binding, "+",
+                    in_key_order=True,
+                    dest_off=ctx.row_offsets.get(node.dest),
+                    dest_lim=ctx.array_limits.get(node.dest),
+                    dest_name=node.dest, ctx=ctx)
+        self.note(node, "dense-grid")
         masks = list(base)
         val = self.eval(node.value, env, ax, binding, masks, ctx)
         m = self._mask(conds, env, ax, binding, masks, ctx)
@@ -481,46 +648,123 @@ class PlanExecutor:
         return self._keyed_combine(dest, partial, node.key_axes, ax, binding,
                                    node.op, in_key_order=False,
                                    dest_off=ctx.row_offsets.get(node.dest),
-                                   dest_lim=ctx.array_limits.get(node.dest))
+                                   dest_lim=ctx.array_limits.get(node.dest),
+                                   dest_name=node.dest, ctx=ctx)
 
     # ---- contractions (runtime guards; fall back on failure) ----
-    def _sliced_operand(self, arr, faxes, ax, binding):
+    def _mxu_masks_ok(self, space: P.IterSpace, key_axes, ctx) -> bool:
+        """Masks admissible on an MXU contraction: only the LEADING KEY
+        axis may carry a pad limit (its out-of-limit partial rows are
+        zeroed by `_limit_mask_partial` before combining).  A limit on a
+        contracted axis or a padded bag axis would let pad rows contribute
+        to kept outputs, so those take the masked dense-grid path."""
+        for a in space.axes:
+            if a.kind == "bag":
+                if ctx.bag_limits.get(a.bag) is not None:
+                    return False
+            else:
+                ov = ctx.axis_overrides.get(a.var)
+                if ov is not None and ov[2] is not None and \
+                        (not key_axes or a.var != key_axes[0]):
+                    return False
+        return True
+
+    def _limit_mask_partial(self, partial, key_axes, ctx):
+        """Zero the partial's out-of-limit leading rows (round-axis
+        padding).  Zero is the + identity, so the combine can never
+        perturb the destination's pad rows — preserving the system
+        invariant that pad rows stay zero."""
+        ov = ctx.axis_overrides.get(key_axes[0]) if key_axes else None
+        if ov is None or ov[2] is None:
+            return partial
+        off, ext, lim, _tot = ov
+        keep = (off + jnp.arange(ext)) < lim
+        keep = keep.reshape((-1,) + (1,) * (jnp.ndim(partial) - 1))
+        return jnp.where(keep, partial, jnp.zeros((), partial.dtype))
+
+    def _sliced_operand(self, arr, name, faxes, ax, binding, ctx,
+                        pad_ok=True):
         """Slice a contraction operand to the iteration extents along each
-        factor axis; None when an offset/extent guard fails."""
+        factor axis; None when an offset/extent guard fails.
+
+        Traced offsets (per-shard rounds) are admitted only under a static
+        certificate — lax.dynamic_slice clamps out-of-range starts
+        silently, so no slice is emitted that cannot be PROVEN in bounds:
+
+        * `name in ctx.aligned` (dim 0): the operand's local block IS the
+          round axis' window; no slice at all, local rows 0..extent.
+        * global operand (never localized): the axis' padded global extent
+          `total` is static; when total ≤ the physical dim, every window
+          [offset, offset+extent) ⊆ [0, total) ⊆ [0, dim) — dynamic_slice
+          cannot clamp (the bounds certificate, DESIGN.md §7).
+        """
         for dim_i, (d, axn) in enumerate(zip(arr.shape, faxes)):
             lo = binding[axn][2]
-            if not isinstance(lo, int):
-                return None
-            if lo != 0 or ax.extent[axn] != d:
-                if lo + ax.extent[axn] > d:
-                    return None
-                arr = jax.lax.slice_in_dim(arr, lo, lo + ax.extent[axn],
-                                           axis=dim_i)
+            ext = ax.extent[axn]
+            if isinstance(lo, int):
+                if lo != 0 or ext != d:
+                    if lo + ext > d:
+                        return None
+                    arr = jax.lax.slice_in_dim(arr, lo, lo + ext,
+                                               axis=dim_i)
+                continue
+            if dim_i == 0 and name in ctx.aligned:
+                if ext != d:
+                    return None      # certificate requires block == window
+                continue
+            ov = ctx.axis_overrides.get(axn)
+            if ov is not None and name not in ctx.row_offsets \
+                    and ov[3] is not None and (ov[3] <= d or pad_ok):
+                if ov[3] > d:
+                    # physical dim shorter than the padded axis (an unpadded
+                    # replicated operand on a non-divisible axis): zero-pad
+                    # it to `total` first, making the window provably in
+                    # bounds.  Only +-contraction callers may opt in
+                    # (pad_ok): a zero row reproduces the empty-bag
+                    # semantics of an out-of-range read under +, and rows
+                    # at or beyond the logical limit are masked out of
+                    # every kept output anyway.
+                    pad = [(0, 0)] * arr.ndim
+                    pad[dim_i] = (0, ov[3] - d)
+                    arr = jnp.pad(arr, pad)
+                arr = jax.lax.dynamic_slice_in_dim(arr, lo, ext, axis=dim_i)
+                continue
+            return None
         return arr
 
     def _product_partial(self, ef: P.EinsumFactors, key_axes, ax, binding,
                          env, ctx: ExecContext = _EMPTY_CTX):
         """jnp.einsum over the factor gathers; None when an offset/extent
         guard fails (caller falls back).  Padded operands are safe here:
-        slices stay within the logical extents and the contraction monoid
-        is +, whose identity matches the zero pad rows."""
+        every slice is statically proven in bounds, pad rows are zero by
+        system invariant, and the contraction monoid is +, whose identity
+        matches the zero pad rows.  Factors covering only a subset of the
+        key axes (contraction-free terms) come back expanded with size-1
+        dims, ready to broadcast against full-key partials."""
         from .tiles import TiledMatrix, unpack
         letters = {a: chr(ord('a') + i) for i, a in enumerate(ax.order)}
         specs = []
         operands = []
+        used: set = set()
         for f, faxes in zip(ef.factors, ef.factor_axes):
             arr = env[f.array]
             if isinstance(arr, TiledMatrix):
                 arr = unpack(arr)
             spec = "".join(letters[axn]
                            for _, axn in zip(arr.shape, faxes))
-            arr = self._sliced_operand(arr, faxes, ax, binding)
+            arr = self._sliced_operand(arr, f.array, faxes, ax, binding,
+                                       ctx)
             if arr is None:
                 return None
             specs.append(spec)
             operands.append(arr)
-        out_spec = "".join(letters[a] for a in key_axes)
+            used.update(faxes)
+        out_axes = [a for a in key_axes if a in used]
+        out_spec = "".join(letters[a] for a in out_axes)
         res = jnp.einsum(",".join(specs) + "->" + out_spec, *operands)
+        if tuple(out_axes) != tuple(key_axes):
+            res = jnp.reshape(
+                res, [ax.extent[a] if a in used else 1 for a in key_axes])
         for o in ef.others:
             res = res * self.eval(o, env, ax, binding, [], ctx)
         return res
@@ -532,16 +776,23 @@ class PlanExecutor:
         key_exts = tuple(ax.extent[a] for a in ax.order if a in key_axes)
         cur = [a for a in ax.order if a in key_axes]
         perm = [cur.index(a) for a in key_axes]
+        mult = 1
+        for a in contracted:
+            mult *= ax.extent[a]
         total = None
-        for sign, term, ef in node.terms:
-            if ef is None:      # term free of the contracted axes:
-                masks: list = []         # Σ_j c = |j|·c, no grid
+        for sign, term, ef, free in node.terms:
+            if ef is not None:
+                part = self._product_partial(ef, key_axes, ax, binding, env,
+                                             ctx)
+                if part is None:
+                    return None
+                if free:        # Σ over the contracted axes of a term free
+                    part = part * mult      # of them = extent-product × term
+            else:               # unrecognized contraction-free term:
+                masks: list = []            # grid-evaluate (Σ_j c = |j|·c)
                 v = self.eval(term, env, ax, binding, masks, ctx)
                 if masks:
                     return None
-                mult = 1
-                for a in contracted:
-                    mult *= ax.extent[a]
                 if jnp.ndim(v) == 0:
                     part = jnp.broadcast_to(v, key_exts)
                 else:  # full-rank with size-1 contracted dims: drop them
@@ -549,32 +800,32 @@ class PlanExecutor:
                         v, axis=tuple(ax.pos(a) for a in contracted))
                     part = jnp.broadcast_to(part, key_exts)
                 part = jnp.transpose(part, perm) * mult
-            else:
-                part = self._product_partial(ef, key_axes, ax, binding, env,
-                                             ctx)
-                if part is None:
-                    return None
             total = part * sign if total is None else total + part * sign
         for sc in node.scalars:
             total = total * self.eval(sc, env, ax, binding, [], ctx)
-        return total
+        return jnp.broadcast_to(total,
+                                tuple(ax.extent[a] for a in key_axes))
 
     def _exec_einsum(self, node: P.EinsumContract, env, ctx):
         ax, binding, conds, base = self.build_space(node.space, env, ctx)
         partial = None
-        if not base:       # padded-bag masks need the masked fallback path
+        if self._mxu_masks_ok(node.space, node.key_axes, ctx):
             if node.product is not None:
                 partial = self._product_partial(node.product, node.key_axes,
                                                 ax, binding, env, ctx)
             else:
                 partial = self._terms_partial(node, ax, binding, env, ctx)
         if partial is None:
+            self.note(node, "fallback:dense-grid")
             return self.run_node(node.fallback, env, ctx)
+        partial = self._limit_mask_partial(partial, node.key_axes, ctx)
+        self.note(node, "einsum")
         dest = env[node.dest]
         return self._keyed_combine(dest, partial, node.key_axes, ax, binding,
                                    "+", in_key_order=True,
                                    dest_off=ctx.row_offsets.get(node.dest),
-                                   dest_lim=ctx.array_limits.get(node.dest))
+                                   dest_lim=ctx.array_limits.get(node.dest),
+                                   dest_name=node.dest, ctx=ctx)
 
     def _exec_tiled(self, node: P.TiledMatmul, env, ctx):
         from .tiles import TiledMatrix, matmul_tiled, unpack
@@ -593,18 +844,20 @@ class PlanExecutor:
         rhs = env[node.rhs]
         if isinstance(rhs, TiledMatrix):
             rhs = unpack(rhs)
-        rhs = self._sliced_operand(rhs, ein.product.factor_axes[1], ax,
-                                   binding)
+        rhs = self._sliced_operand(rhs, node.rhs, ein.product.factor_axes[1],
+                                   ax, binding, ctx)
         if rhs is None:
             return self.run_node(ein, env, ctx)
         res = matmul_tiled(lhs, rhs)
         for o in ein.product.others:
             res = res * self.eval(o, env, ax, binding, [], ctx)
+        self.note(node, "pallas-tiled")
         dest = env[node.dest]
         return self._keyed_combine(dest, res, ein.key_axes, ax, binding,
                                    "+", in_key_order=True,
                                    dest_off=ctx.row_offsets.get(node.dest),
-                                   dest_lim=ctx.array_limits.get(node.dest))
+                                   dest_lim=ctx.array_limits.get(node.dest),
+                                   dest_name=node.dest, ctx=ctx)
 
     # ---- scalar reductions ----
     def _total_reduce(self, node: P.ScalarReduce, env, ax, binding, conds,
@@ -666,12 +919,14 @@ class PlanExecutor:
 
 class CompiledProgram:
     def __init__(self, prog: Program, target, optimize_contractions=True,
-                 use_kernels=False, infer_distributions=True):
+                 use_kernels=False, infer_distributions=True,
+                 dense_fastpath=True):
         self.program = prog
         self.target = target
         self.config = PlanConfig(optimize_contractions=optimize_contractions,
                                  use_kernels=use_kernels,
-                                 infer_distributions=infer_distributions)
+                                 infer_distributions=infer_distributions,
+                                 dense_fastpath=dense_fastpath)
         self.plan = plan_program(target, prog, self.config)
         from .dist_analysis import collect
         self.dists = collect(self.plan)   # array → Dist (pass-8 annotations)
@@ -724,17 +979,20 @@ class CompiledProgram:
 def compile_program(fn_or_prog, *, restrictions=True,
                     optimize_contractions=True,
                     use_kernels=False,
-                    infer_distributions=True) -> CompiledProgram:
+                    infer_distributions=True,
+                    dense_fastpath=True) -> CompiledProgram:
     """Front door: loop program → restrictions check (Def. 3.1) →
     comprehension translation (Fig. 2) → pass pipeline (passes.py) →
     executable physical plan.  use_kernels=True routes +-group-bys through
     the Pallas one-hot-MXU segment kernel (interpret-mode off-TPU);
     infer_distributions=False pins every array to REP (replicated — the
-    pre-analysis distributed behaviour)."""
+    pre-analysis distributed behaviour); dense_fastpath=False disables the
+    executor specialization pass (DenseMap / MXU AxisReduce / columnar
+    certificates) — operators then always materialize the general way."""
     prog = fn_or_prog if isinstance(fn_or_prog, Program) \
         else fn_or_prog.program
     if restrictions:
         check_restrictions(prog)
     target = translate(prog)
     return CompiledProgram(prog, target, optimize_contractions, use_kernels,
-                           infer_distributions)
+                           infer_distributions, dense_fastpath)

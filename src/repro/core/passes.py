@@ -14,30 +14,39 @@ contract (see DESIGN.md):
   3. axis-key-classification    group-by keys that are pure axis vars →
                                 AxisReduce (Rule 17 generalized); constant
                                 keys → ScalarReduce at a point (Rule 16)
-  4. einsum-recognition         +-AxisReduce of a product of gathers (or a
+  4. dense-fastpath             operator *specialization*, never an operator
+                                change: identity-space MapExpr → DenseMap
+                                (vectorized store, no index grids/gathers);
+                                +-AxisReduce of a product of gathers gets an
+                                MXU `product` certificate (executed via
+                                jnp.einsum even in the paper-faithful
+                                configuration); gather-free ScalarReduce
+                                marked `dense` (pure columnar fold)
+  5. einsum-recognition         +-AxisReduce of a product of gathers (or a
                                 ±-sum of products) → EinsumContract
                                 (beyond-paper MXU contraction)
-  5. tiled-fusion               matmul-shaped EinsumContract → TiledMatmul
+  6. tiled-fusion               matmul-shaped EinsumContract → TiledMatmul
                                 (§5: block-sparse Pallas kernel on packed
                                 lhs, no unpack)
-  6. dead-store-elimination     a store fully overwritten by a later
+  7. dead-store-elimination     a store fully overwritten by a later
                                 equal-coverage unconditional store, with no
                                 intervening reader, is dropped
-  7. update-fusion              consecutive reductions sharing an iteration
+  8. update-fusion              consecutive reductions sharing an iteration
                                 space and touching disjoint state → Fused
                                 (one distributed collective round)
-  8. distribution-analysis      fixed-point inference of a per-array
+  9. distribution-analysis      fixed-point inference of a per-array
                                 sharding (REP ≤ ONED_ROW ≤ TWOD_BLOCK) over
                                 the finished plan; annotation-only
                                 (dist_analysis.py, DESIGN.md §6)
 
-Passes 2-5 must run in this order: classification consumes rewritten reads,
-einsum consumes AxisReduce nodes, tiled-fusion consumes EinsumContract
-nodes.  Passes 6-7 are cleanups over the final operator choice and must run
-last among the transforms (fusion would otherwise hide stores from the
-deadness scan).  Pass 8 transforms nothing — it must see the FINAL operator
-choices (a Fused round places all its parts, an eliminated store constrains
-nothing), so it runs after everything else.
+Passes 2-6 must run in this order: classification consumes rewritten reads,
+dense-fastpath recognizes products on AxisReduce nodes from 3, einsum
+promotes that recognition to EinsumContract nodes, tiled-fusion consumes
+EinsumContract nodes.  Passes 7-8 are cleanups over the final operator
+choice and must run last among the transforms (fusion would otherwise hide
+stores from the deadness scan).  Pass 9 transforms nothing — it must see
+the FINAL operator choices (a Fused round places all its parts, an
+eliminated store constrains nothing), so it runs after everything else.
 """
 from __future__ import annotations
 
@@ -55,6 +64,7 @@ class PlanConfig:
     optimize_contractions: bool = True   # False = paper-faithful plans
     use_kernels: bool = False            # +-group-bys via Pallas segment kernel
     infer_distributions: bool = True     # False = REP-everything annotations
+    dense_fastpath: bool = True          # False = no executor specialization
 
 
 # ---------------------------------------------------------------------------
@@ -299,10 +309,93 @@ def pass_classify_keys(nodes: list, prog, config) -> list:
 
 
 # ---------------------------------------------------------------------------
-# pass 4: einsum recognition (beyond-paper contraction)
+# pass 4: dense fast-path operator specialization
 # ---------------------------------------------------------------------------
 
-def _product_factors(value, space: P.IterSpace, key_axes, contracted):
+def _static_zero_lo(e) -> bool:
+    return isinstance(e, Const) and e.value == 0
+
+
+def _identity_gather(g, key_axes) -> bool:
+    return (len(g.idxs) == len(key_axes)
+            and all(isinstance(ix, Var) and ix.name == a
+                    for ix, a in zip(g.idxs, key_axes)))
+
+
+def _dense_value_ok(e, key_axes, axis_vars: set) -> bool:
+    """Evaluating `e` over the identity space needs no index grids: every
+    array read is an identity gather (indexed by exactly the key axes, in
+    order) and no bare axis var appears outside gather indices."""
+    if isinstance(e, (Get, P.Gather)):
+        return _identity_gather(e, key_axes)
+    if isinstance(e, Var):
+        return e.name not in axis_vars
+    if isinstance(e, Const):
+        return True
+    if isinstance(e, BinOp):
+        return (_dense_value_ok(e.lhs, key_axes, axis_vars)
+                and _dense_value_ok(e.rhs, key_axes, axis_vars))
+    if isinstance(e, UnOp):
+        return _dense_value_ok(e.e, key_axes, axis_vars)
+    if isinstance(e, Call):
+        return all(_dense_value_ok(a, key_axes, axis_vars) for a in e.args)
+    return False
+
+
+def pass_dense_fastpath(nodes: list, prog, config) -> list:
+    """Operator *specialization* (not a plan-level operator change):
+
+    * MapExpr whose iteration space provably equals its write space — all
+      0-based range axes, key order = axis order, no conditions, identity
+      gathers only — becomes `DenseMap`: the executor emits one vectorized
+      jnp expression with no index grids, masks or scatters (runtime
+      extent mismatch falls back to the general MapExpr path).
+    * +-AxisReduce whose value is a product of axis-indexed gathers gets a
+      `product` MXU certificate: the executor contracts via jnp.einsum
+      instead of materializing the dense iteration grid.  The node itself
+      is unchanged — this is how the paper-faithful configuration
+      (optimize_contractions=False) keeps native-BLAS inner loops without
+      changing its operator choices.
+    * ScalarReduce whose value/conditions contain no array reads is marked
+      `dense` (pure columnar fold — certifies that no gather or index grid
+      is materialized for it).
+    """
+    if not config.dense_fastpath:
+        return nodes
+
+    def fix(n):
+        if isinstance(n, P.AxisReduce) and n.op == "+" \
+                and not n.space.conds and n.contracted:
+            n.product = _product_factors(n.value, n.space, n.key_axes,
+                                         n.contracted)
+            return n
+        if isinstance(n, P.ScalarReduce):
+            n.dense = not (_has_gather(n.value)
+                           or any(_has_gather(c) for c in n.space.conds))
+            return n
+        if type(n) is not P.MapExpr or n.key_axes is None:
+            return n
+        sp = n.space
+        if sp.conds or not sp.axes:
+            return n
+        if any(a.kind != "range" or not _static_zero_lo(a.lo)
+               for a in sp.axes):
+            return n
+        if n.key_axes != sp.axis_vars:
+            return n
+        if not _dense_value_ok(n.value, n.key_axes, set(sp.axis_vars)):
+            return n
+        return P.DenseMap(n.stmt, sp, n.reads, n.dest, n.value,
+                          key_axes=n.key_axes)
+    return _map_nodes(nodes, fix)
+
+
+# ---------------------------------------------------------------------------
+# pass 5: einsum recognition (beyond-paper contraction)
+# ---------------------------------------------------------------------------
+
+def _product_factors(value, space: P.IterSpace, key_axes, contracted,
+                     require_all_keys: bool = True):
     """Static half of the contraction recognizer: value must be a product of
     axis-indexed gathers times axis-free scalars covering all axes."""
     axis_vars = set(space.axis_vars)
@@ -337,7 +430,8 @@ def _product_factors(value, space: P.IterSpace, key_axes, contracted):
             continue
         return None
     used = {a for axs in factor_axes for a in axs}
-    if not set(key_axes) <= used or not set(contracted) <= used:
+    need = set(contracted) | (set(key_axes) if require_all_keys else set())
+    if not need <= used:
         return None
     return P.EinsumFactors(tuple(factors), tuple(factor_axes), tuple(others))
 
@@ -373,12 +467,17 @@ def _term_split(node: P.AxisReduce, contracted):
     entries = []
     for sign, term in terms:
         if not (_axes_used(term, node.space) & set(contracted)):
-            entries.append((sign, term, None))       # contraction-free term
+            # contraction-free term (Σ_j c = |j|·c): recognize its product
+            # structure too when possible, so the per-shard executor can
+            # slice operands instead of materializing a gather grid
+            ef = _product_factors(term, node.space, node.key_axes, (),
+                                  require_all_keys=False)
+            entries.append((sign, term, ef, True))
         else:
             ef = _product_factors(term, node.space, node.key_axes, contracted)
             if ef is None:
                 return None
-            entries.append((sign, term, ef))
+            entries.append((sign, term, ef, False))
     return tuple(scalars), tuple(entries)
 
 
@@ -392,7 +491,13 @@ def pass_einsum(nodes: list, prog, config) -> list:
         contracted = n.contracted
         if not contracted:
             return n
-        ef = _product_factors(n.value, n.space, n.key_axes, contracted)
+        # dense-fastpath already recognized the product; promote it to a
+        # plan-level EinsumContract (recognition happens once).  The
+        # fallback grid drops its MXU certificate: the contract's own
+        # einsum path subsumes it, and a failed guard must not re-fail.
+        ef = n.product if n.product is not None else \
+            _product_factors(n.value, n.space, n.key_axes, contracted)
+        n.product = None
         if ef is not None:
             return P.EinsumContract(n.stmt, n.space, n.reads, n.dest,
                                     n.key_axes, product=ef, fallback=n)
@@ -407,7 +512,7 @@ def pass_einsum(nodes: list, prog, config) -> list:
 
 
 # ---------------------------------------------------------------------------
-# pass 5: §5 tiled-matmul fusion
+# pass 6: §5 tiled-matmul fusion
 # ---------------------------------------------------------------------------
 
 def pass_tiled_fusion(nodes: list, prog, config) -> list:
@@ -427,7 +532,7 @@ def pass_tiled_fusion(nodes: list, prog, config) -> list:
 
 
 # ---------------------------------------------------------------------------
-# pass 6: dead-store elimination
+# pass 7: dead-store elimination
 # ---------------------------------------------------------------------------
 
 def _reads_name(node, name: str) -> bool:
@@ -460,13 +565,18 @@ def _same_coverage(killer, victim) -> bool:
     The killer's VALUE must be gather-free: a gather whose index lands out
     of range drops that row at runtime (empty-bag semantics), so a store
     with gathers in its value may write fewer cells than the victim did."""
-    if type(killer) is not type(victim) or killer.dest != victim.dest:
+    # compare at the MapExpr/Scatter family level: DenseMap is a MapExpr
+    # specialization with identical write coverage
+    both_map = isinstance(killer, P.MapExpr) and isinstance(victim, P.MapExpr)
+    both_scatter = isinstance(killer, P.Scatter) and \
+        isinstance(victim, P.Scatter)
+    if not (both_map or both_scatter) or killer.dest != victim.dest:
         return False
     if killer.space.axes != victim.space.axes or killer.space.conds:
         return False
     if _has_gather(killer.value):
         return False
-    if isinstance(killer, P.MapExpr):
+    if both_map:
         return killer.key_axes == victim.key_axes
     return killer.keys == victim.keys
 
@@ -492,7 +602,7 @@ def pass_dead_stores(nodes: list, prog, config) -> list:
 
 
 # ---------------------------------------------------------------------------
-# pass 7: cross-statement update fusion
+# pass 8: cross-statement update fusion
 # ---------------------------------------------------------------------------
 
 _FUSABLE = (P.SegmentReduce, P.AxisReduce, P.ScalarReduce)
@@ -534,7 +644,7 @@ def pass_fuse_updates(nodes: list, prog, config) -> list:
 
 
 # ---------------------------------------------------------------------------
-# pass 8: distribution analysis (annotation-only; see dist_analysis.py)
+# pass 9: distribution analysis (annotation-only; see dist_analysis.py)
 # ---------------------------------------------------------------------------
 
 def pass_distribution(nodes: list, prog, config) -> list:
@@ -550,6 +660,7 @@ def pass_distribution(nodes: list, prog, config) -> list:
 PIPELINE = (
     ("identity-traversal", pass_identity_traversal),
     ("axis-key-classification", pass_classify_keys),
+    ("dense-fastpath", pass_dense_fastpath),
     ("einsum-recognition", pass_einsum),
     ("tiled-fusion", pass_tiled_fusion),
     ("dead-store-elimination", pass_dead_stores),

@@ -147,6 +147,24 @@ class MapExpr:
 
 
 @dataclass
+class DenseMap(MapExpr):
+    """Dense fast-path specialization of MapExpr (pass: dense-fastpath):
+    the iteration space is a 0-based all-range space whose key order IS the
+    axis order, and every read in the value is an identity gather (indexed
+    by exactly the key axes, in order) or a scalar.  The executor lowers it
+    to a plain vectorized jnp expression over whole arrays — no index-grid
+    materialization, no gathers, no masks, no .at[].set — locally and per
+    shard (aligned operands are used as local blocks, replicated ones via a
+    bounds-certified dynamic slice).  Runtime extent mismatch falls back to
+    the general MapExpr path; results never change."""
+
+    def describe(self) -> str:
+        return (f"DenseMap[{self.space.pretty()}] → "
+                f"{self.dest}[{','.join(self.key_axes)}]"
+                f"  (vectorized, gathers elided)")
+
+
+@dataclass
 class Scatter:
     """Store at computed affine keys (restrictions ⇒ no duplicate keys)."""
     stmt: Any
@@ -183,7 +201,16 @@ class SegmentReduce:
 @dataclass
 class AxisReduce:
     """Group-by on pure axis keys (Rule 17 generalized): ⊕-reduce the
-    contracted axes; elementwise merge when nothing is contracted."""
+    contracted axes; elementwise merge when nothing is contracted.
+
+    `product` is the dense fast-path MXU certificate (pass:
+    dense-fastpath): when the +-reduced value is recognized as a product of
+    axis-indexed gathers, the executor materializes THIS SAME operator via
+    jnp.einsum instead of the dense iteration grid.  Unlike EinsumContract
+    this is not a plan-level operator change — the node stays an
+    AxisReduce (the paper-faithful operator choice, kept under
+    optimize_contractions=False) and only its local materialization rides
+    the MXU; guard failure falls back to the grid."""
     stmt: Any
     space: IterSpace
     reads: frozenset
@@ -191,6 +218,7 @@ class AxisReduce:
     key_axes: tuple[str, ...]
     op: str
     value: Expr
+    product: Optional[EinsumFactors] = None   # dense-fastpath MXU certificate
     shardings: Optional[dict] = None   # dist_analysis annotation
 
     @property
@@ -200,7 +228,11 @@ class AxisReduce:
 
     def describe(self) -> str:
         over = ",".join(self.contracted) or "·"
-        return f"AxisReduce({self.op} over {over}) → {self.dest}[{','.join(self.key_axes)}]"
+        base = (f"AxisReduce({self.op} over {over}) → "
+                f"{self.dest}[{','.join(self.key_axes)}]")
+        if self.product is not None:
+            base += f"  [mxu: '{self.product.spec(self.key_axes)}']"
+        return base
 
 
 @dataclass
@@ -269,7 +301,10 @@ class TiledMatmul:
 @dataclass
 class ScalarReduce:
     """Rule 16: total ⊕-aggregation into a scalar, or into one fixed cell
-    (`point`) for constant group-by keys."""
+    (`point`) for constant group-by keys.  `dense` is the dense fast-path
+    certificate (pass: dense-fastpath): the value and conditions read only
+    bag value columns and scalars — the reduction is a pure columnar
+    ⊕-fold with no gathers and no index-grid materialization."""
     stmt: Any
     space: IterSpace
     reads: frozenset
@@ -278,12 +313,14 @@ class ScalarReduce:
     value: Expr
     point: Optional[tuple[int, ...]] = None
     bool_any: Optional[Expr] = None  # peephole: max/min of float(bool) → any/all
+    dense: bool = False              # dense-fastpath columnar certificate
     shardings: Optional[dict] = None  # dist_analysis annotation
 
     def describe(self) -> str:
         tgt = self.dest if self.point is None else \
             f"{self.dest}[{','.join(map(str, self.point))}]"
-        return f"ScalarReduce({self.op})[{self.space.pretty()}] → {tgt}"
+        tail = "  [dense: columnar, no gathers]" if self.dense else ""
+        return f"ScalarReduce({self.op})[{self.space.pretty()}] → {tgt}{tail}"
 
 
 @dataclass

@@ -1,0 +1,154 @@
+"""Dense fast-path operator specialization (pass: dense-fastpath).
+
+Golden explain() output: identity-space stores show as DenseMap, columnar
+reductions carry the [dense] certificate, and the paper-faithful matmul's
+AxisReduce carries the [mxu] product certificate — plus guard tests that
+non-identity indexing (transposed / shifted subscripts) takes the general
+path with identical results, and that the runtime extent guard falls back
+without changing results.
+"""
+import numpy as np
+
+from repro.core import compile_program, interpret, loop_program
+from repro.core import dim, matrix, scalar, vector
+from repro.core.plan import AxisReduce, DenseMap, MapExpr
+from repro.core.programs import ALL
+
+
+# ---------------------------------------------------------------------------
+# golden explains
+# ---------------------------------------------------------------------------
+
+def test_matrix_addition_explains_dense_map():
+    cp = compile_program(ALL["matrix_addition"])
+    text = cp.explain()
+    assert "DenseMap[i×j] → R[i,j]" in text
+    assert "(vectorized, gathers elided)" in text
+    assert isinstance(cp.plan[0], DenseMap)
+    rng = np.random.default_rng(0)
+    M, N = rng.standard_normal((5, 4)), rng.standard_normal((5, 4))
+    out = cp.run(dict(M=M, N=N, R=np.zeros((5, 4)), n=5, m=4))
+    np.testing.assert_allclose(np.asarray(out["R"]), M + N, rtol=1e-5)
+
+
+def test_conditional_sum_explains_dense_columnar():
+    text = compile_program(ALL["conditional_sum"]).explain()
+    assert "[dense: columnar, no gathers]" in text
+
+
+def test_gathering_reduce_is_not_dense():
+    @loop_program
+    def gsum(V: vector, A: vector, s: scalar, n: dim):
+        for i in range(0, n):
+            s += A[int(V[i])]
+
+    text = compile_program(gsum).explain()
+    assert "[dense" not in text         # value gathers: no columnar cert
+
+
+def test_paper_faithful_matmul_explains_mxu():
+    cp = compile_program(ALL["matrix_multiplication"],
+                         optimize_contractions=False)
+    text = cp.explain()
+    assert "EinsumContract" not in text   # operator choice stays faithful
+    assert "AxisReduce(+ over k)" in text
+    assert "[mxu: 'ik,kj->ij']" in text   # ...but materializes on the MXU
+    node = cp.plan[1]
+    assert isinstance(node, AxisReduce) and node.product is not None
+    rng = np.random.default_rng(1)
+    A, B = rng.standard_normal((7, 5)), rng.standard_normal((5, 6))
+    out = cp.run(dict(M=A, N=B, R=np.zeros((7, 6)), n=7, m=6, l=5))
+    np.testing.assert_allclose(np.asarray(out["R"]), A @ B, rtol=1e-5)
+
+
+def test_promoted_einsum_fallback_keeps_grid():
+    # once promoted to EinsumContract, the fallback AxisReduce must NOT
+    # retry the same product guards (it exists to handle their failure)
+    cp = compile_program(ALL["matrix_multiplication"])
+    node = cp.plan[1].contract          # TiledMatmul → EinsumContract
+    assert node.fallback.product is None
+
+
+def test_fastpath_disabled_matches_and_explains_plain():
+    cp_off = compile_program(ALL["matrix_multiplication"],
+                             optimize_contractions=False,
+                             dense_fastpath=False)
+    text = cp_off.explain()
+    assert "[mxu" not in text and "DenseMap" not in text
+    cp_on = compile_program(ALL["matrix_multiplication"],
+                            optimize_contractions=False)
+    rng = np.random.default_rng(2)
+    A, B = rng.standard_normal((6, 4)), rng.standard_normal((4, 9))
+    ins = dict(M=A, N=B, R=np.zeros((6, 9)), n=6, m=9, l=4)
+    np.testing.assert_allclose(np.asarray(cp_off.run(ins)["R"]),
+                               np.asarray(cp_on.run(ins)["R"]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# guard tests: non-identity indexing takes the general path
+# ---------------------------------------------------------------------------
+
+def test_transposed_subscripts_take_general_path():
+    @loop_program
+    def tadd(M: matrix, N: matrix, R: matrix, n: dim):
+        for i in range(0, n):
+            for j in range(0, n):
+                R[i, j] = M[j, i] + N[i, j]
+
+    cp = compile_program(tadd)
+    store = cp.plan[0]
+    assert isinstance(store, MapExpr) and not isinstance(store, DenseMap)
+    assert "DenseMap" not in cp.explain()
+    rng = np.random.default_rng(3)
+    M, N = rng.standard_normal((4, 4)), rng.standard_normal((4, 4))
+    out = cp.run(dict(M=M, N=N, R=np.zeros((4, 4)), n=4))
+    np.testing.assert_allclose(np.asarray(out["R"]), M.T + N, rtol=1e-5)
+
+
+def test_shifted_subscripts_take_general_path():
+    @loop_program
+    def shift(V: vector, W: vector, n: dim):
+        for i in range(0, n):
+            W[i] = V[i + 1] * 2.0
+
+    cp = compile_program(shift)
+    store = cp.plan[0]
+    assert isinstance(store, MapExpr) and not isinstance(store, DenseMap)
+    v = np.arange(5, dtype=np.float64)
+    ins = dict(V=v, W=np.full(5, 7.0), n=5)
+    out = cp.run(ins)
+    ref = interpret(shift.program, dict(V=v.copy(), W=np.full(5, 7.0), n=5))
+    # row n-1 reads out of range → empty bag → keeps the old value
+    np.testing.assert_allclose(np.asarray(out["W"]), ref["W"], rtol=1e-6)
+    assert ref["W"][4] == 7.0
+
+
+def test_negative_segment_keys_drop_not_wrap():
+    # the direct-scatter segment path relies on mode="drop" for UPPER
+    # bounds, but jax normalizes negative indices to end-relative ones
+    # BEFORE the drop check — they need the explicit sentinel (§3.4:
+    # out-of-range writes denote the empty bag, they never wrap)
+    cp = compile_program(ALL["group_by"])
+    ins = dict(S=(np.array([0.0, -1.0, 2.0]), np.array([1.0, 10.0, 3.0])),
+               C=np.zeros(3))
+    ref = interpret(ALL["group_by"].program,
+                    dict(S=(np.array([0.0, -1.0, 2.0]),
+                            np.array([1.0, 10.0, 3.0])), C=np.zeros(3)))
+    np.testing.assert_allclose(np.asarray(cp.run(ins)["C"]), ref["C"],
+                               rtol=1e-6)
+    assert ref["C"][2] == 3.0           # key -1 dropped, not wrapped
+
+
+def test_dense_map_runtime_guard_falls_back():
+    # the node IS a DenseMap, but the destination has more rows than the
+    # iteration space at runtime: the extent guard must route through the
+    # general MapExpr path (write only the covered block)
+    cp = compile_program(ALL["matrix_addition"])
+    assert isinstance(cp.plan[0], DenseMap)
+    rng = np.random.default_rng(4)
+    M, N = rng.standard_normal((3, 4)), rng.standard_normal((3, 4))
+    R0 = np.full((5, 4), 9.0)
+    out = cp.run(dict(M=M, N=N, R=R0.copy(), n=3, m=4))
+    got = np.asarray(out["R"])
+    np.testing.assert_allclose(got[:3], M + N, rtol=1e-5)
+    np.testing.assert_allclose(got[3:], 9.0)
