@@ -3,13 +3,24 @@ replicated execution per program, on a forced-host-device mesh.
 
 Run standalone (forces 8 host devices before importing jax):
 
-  python benchmarks/distributed.py
+  python benchmarks/distributed.py [--check]
 
 or as a section of the harness: python -m benchmarks.run --sections dist
-(emits BENCH_distributed.json, uploaded as a CI artifact).
+[--check] (emits BENCH_distributed.json, uploaded as a CI artifact).
+
+--check is the sharded-group-by regression gate (wired into the
+`distributed` CI job): it FAILS (exit 1) when shardmap is more than 10%
+slower than replicated on any benchmarked program — i.e. when inferred
+placement makes a program worse than replicating everything.  The
+group-by family (word_count, group_by) is exactly where this used to
+fail before the operator-selection subsystem (DESIGN.md §8); the gate
+keeps it green.  A candidate regression is confirmed by an independent
+re-measurement of just the flagged programs before failing (host-device
+collective timings are noisy).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
@@ -68,22 +79,44 @@ def _cases(scale: int):
     }
 
 
-def _time(fn, reps=2):
+def _time_pair(fn_a, fn_b, pairs=5, reps=2):
+    """(min_a_ms, min_b_ms) over `pairs` INTERLEAVED passes — the fig3
+    methodology (benchmarks/programs.py): adjacent a/b passes see the
+    same machine conditions, so background-load drift is common-mode
+    within a pair, and the min absorbs collective-timing spikes (host
+    psum/psum_scatter swing ±50% on a loaded CI box)."""
     import numpy as np
-    for v in fn().values():                # warm-up / compile, synchronized
-        np.asarray(v)
-    t0 = time.perf_counter()
-    for _ in range(reps):
+
+    def one_pass(fn):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for v in fn().values():
+                np.asarray(v)
+        return (time.perf_counter() - t0) / reps * 1e3
+
+    for fn in (fn_a, fn_b):                # warm-up / compile, synchronized
         for v in fn().values():
             np.asarray(v)
-    return (time.perf_counter() - t0) / reps * 1e3
+    ta, tb = [], []
+    for i in range(pairs):
+        # alternate which side runs first: periodic interference otherwise
+        # lands disproportionately on the second position of every pair
+        if i % 2 == 0:
+            ta.append(one_pass(fn_a))
+            tb.append(one_pass(fn_b))
+        else:
+            tb.append(one_pass(fn_b))
+            ta.append(one_pass(fn_a))
+    return min(ta), min(tb)
 
 
-def rows(scale: int = 1):
+def rows(scale: int = 1, only=None, pairs: int = 5):
     """[(name, shardmap_ms, replicated_ms, sharded_arrays)] on a forced
     host mesh — placement quality, not absolute speed (CPU psum is the
     bottleneck; the point is that both paths stay correct and the sharded
-    path is exercised end to end)."""
+    path is exercised end to end).  `only` restricts measurement to a set
+    of program names (the --check gate re-measures flagged programs
+    before failing)."""
     _force_devices()
     from repro.core import compile_program
     from repro.core.dist_analysis import Dist
@@ -94,21 +127,64 @@ def rows(scale: int = 1):
     mesh = make_test_mesh((mesh_devices(),), ("data",))
     out = []
     for name, ins in _cases(scale).items():
+        if only is not None and name not in only:
+            continue
         cp = compile_program(ALL[name])
         sharded = sum(d >= Dist.ONED_ROW for d in cp.dists.values())
         dp = compile_distributed(cp, mesh, ("data",), mode="shardmap")
         rep = compile_distributed(cp, mesh, ("data",), mode="shardmap",
                                   shard_dense=False)
-        t_shard = _time(lambda: dp.run(ins))
-        t_rep = _time(lambda: rep.run(ins))
+        t_shard, t_rep = _time_pair(lambda: dp.run(ins),
+                                    lambda: rep.run(ins), pairs=pairs)
         out.append((name, t_shard, t_rep, sharded))
     return out
 
 
+_SLOWDOWN_GATE = 1.10     # shardmap >10% slower than replicated fails
+
+
+def check_rows(measured, scale: int = 1) -> bool:
+    """The sharded-vs-replicated regression gate.  True = FAILED.  A
+    program is flagged when shardmap > 1.1 × replicated; every flagged
+    program is re-measured independently and only a reproduced slowdown
+    fails the gate (single-pass host-collective timings flip on noise)."""
+    def _bad(rws):
+        return {n: (a, b) for n, a, b, _k in rws
+                if a > b * _SLOWDOWN_GATE}
+    bad = _bad(measured)
+    if bad:
+        print(f"[dist] {len(bad)} candidate slowdown(s): "
+              f"{','.join(sorted(bad))}; re-measuring to confirm")
+        # confirmation pass at higher depth: interleaved mins at 11 pairs
+        # push the noise floor below the 10% gate on a loaded CI box
+        rerun = rows(scale, only=frozenset(bad), pairs=11)
+        bad = {n: v for n, v in _bad(rerun).items() if n in bad}
+    if bad:
+        print("[dist] SHARDED-GROUP-BY GATE FAILED (shardmap >10% slower "
+              "than replicated, confirmed by re-measurement):")
+        for n, (a, b) in sorted(bad.items()):
+            print(f"  {n}: shardmap {a:.1f}ms vs replicated {b:.1f}ms "
+                  f"({a / b:.2f}x)")
+        return True
+    print(f"[dist] sharded-group-by gate OK ({len(measured)} programs, "
+          f"shardmap <= {_SLOWDOWN_GATE:.2f}x replicated everywhere)")
+    return False
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when shardmap is >10%% slower than "
+                         "replicated on any program (re-measured to "
+                         "confirm)")
+    args = ap.parse_args()
+    measured = rows(args.scale)
     print("name,shardmap_ms,replicated_ms,sharded_dense_arrays")
-    for name, a, b, k in rows():
+    for name, a, b, k in measured:
         print(f"{name},{a:.1f},{b:.1f},{k}")
+    if args.check and check_rows(measured, args.scale):
+        sys.exit(1)
 
 
 if __name__ == "__main__":

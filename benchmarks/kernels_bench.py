@@ -1,0 +1,78 @@
+"""[kernels] section: per shape-class timings of every SegmentReduce
+backend candidate (scatter / sort / onehot / pallas), plus what the
+analytical cost model would pick for the class — so autotune decisions
+are inspectable and a regression in one backend is attributable to that
+backend rather than to the selection policy.
+
+Run standalone:  python benchmarks/kernels_bench.py
+or as a harness section:  python -m benchmarks.run --sections kernels
+(emits BENCH_kernels.json).
+
+The measurement reuses op_select's own autotune probes
+(`_measure_segment`), so the numbers here are exactly what autotune mode
+would record into `.repro_autotune.json` for the same classes.  `None`
+means the candidate was skipped by the work caps (onehot materializes
+N×K; Pallas interpret mode off-TPU is python-level).
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+# (n, k, d, op): the fig3 group-by family shapes (word_count/histogram/
+# group_by and their per-shard blocks) plus small-K and wide-D classes
+SHAPE_CLASSES = [
+    (1024, 128, 1, "+"),        # distributed bench, whole bag
+    (128, 128, 1, "+"),         # …its per-shard block (8 shards)
+    (4096, 16, 1, "+"),         # small K: the one-hot dot regime
+    (8192, 128, 1, "+"),
+    (200_000, 1000, 1, "+"),    # fig3 word_count / group_by
+    (200_000, 256, 1, "+"),     # fig3 histogram (per channel)
+    (8192, 128, 8, "+"),        # wide values ([N, D] path)
+    (8192, 128, 1, "min"),      # non-+ monoid (no onehot candidate)
+]
+
+
+def rows():
+    from repro.core.op_select import (SEGMENT_CANDIDATES, OpSelector,
+                                      _measure_segment)
+    import jax.numpy as jnp
+
+    sel = OpSelector(mode="cost", cache_path=None)
+    out = []
+    for n, k, d, op in SHAPE_CLASSES:
+        cands = SEGMENT_CANDIDATES[op]
+        us = {b: _measure_segment(b, n, k, d, op, jnp.float32)
+              for b in cands}
+        finite = {b: t for b, t in us.items() if math.isfinite(t)}
+        best = min(finite, key=finite.get)
+        model = sel.choose_segment(n=n, k=k, d=d, op=op, dtype="float32",
+                                   dest_dist="ONED_ROW",
+                                   candidates=cands).backend
+        out.append({"n": n, "k": k, "d": d, "op": op,
+                    "class": sel.segment_class(n, k, d, op, "float32",
+                                               "ONED_ROW"),
+                    "us": {b: (round(t, 1) if math.isfinite(t) else None)
+                           for b, t in us.items()},
+                    "measured_best": best, "cost_model": model})
+    return out
+
+
+def print_rows(krows) -> None:
+    print("n,k,d,op,measured_best,cost_model,us_per_backend")
+    for r in krows:
+        us = " ".join(f"{b}={t}" for b, t in r["us"].items())
+        print(f"{r['n']},{r['k']},{r['d']},{r['op']},"
+              f"{r['measured_best']},{r['cost_model']},{us}")
+
+
+def main():
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -9,9 +9,14 @@ Sections:
             gates >15% ratio regressions against the committed
             BENCH_programs.json (exit 1 — wired into CI)
   [sec5]    packed/tiled matrices (paper §5)
+  [kernels] per shape-class timing of every SegmentReduce backend
+            candidate vs the cost model's pick (DESIGN.md §8); emits
+            BENCH_kernels.json so autotune decisions are inspectable
   [dist]    shardmap (inferred shardings) vs replicated per program on a
             forced 8-host-device mesh (DESIGN.md §6); run this section in
-            a FRESH process (it forces XLA_FLAGS before importing jax)
+            a FRESH process (it forces XLA_FLAGS before importing jax);
+            --check fails when shardmap is >10% slower than replicated
+            on any benchmarked program (wired into CI)
 """
 from __future__ import annotations
 
@@ -63,20 +68,25 @@ def main() -> None:
                          "across runs are reported and written (the "
                          "committed baseline uses 3, see README)")
     ap.add_argument("--check", action="store_true",
-                    help="compare fresh fig3 ratios against the committed "
-                         "BENCH_programs.json and exit non-zero when any "
-                         "program's ratio regresses by more than 15%%")
+                    help="regression gates: fig3 ratios vs the committed "
+                         "BENCH_programs.json (>15%% worse fails), and "
+                         "dist shardmap vs replicated (>10%% slower "
+                         "fails); exit non-zero on either")
     ap.add_argument("--sections", default="table1,fig3,sec5")
     ap.add_argument("--json-out", default=os.path.join(
         _REPO, "BENCH_programs.json"),
         help="fig3 artifact path for the perf trajectory ('' disables)")
+    ap.add_argument("--kernels-json-out", default=os.path.join(
+        _REPO, "BENCH_kernels.json"),
+        help="kernels artifact path ('' disables)")
     ap.add_argument("--dist-json-out", default=os.path.join(
         _REPO, "BENCH_distributed.json"),
         help="dist artifact path ('' disables)")
     args = ap.parse_args()
     sections = args.sections.split(",")
-    if args.check and "fig3" not in sections:
-        ap.error("--check gates fig3 ratios: include fig3 in --sections")
+    if args.check and not {"fig3", "dist"} & set(sections):
+        ap.error("--check gates fig3 and/or dist: include one in "
+                 "--sections")
 
     if "dist" in sections:
         if sections != ["dist"]:
@@ -176,6 +186,22 @@ def main() -> None:
             print(f"{name},{t:.0f}")
         print()
 
+    if "kernels" in sections:
+        from benchmarks import kernels_bench
+        print("[kernels] SegmentReduce backend candidates per shape class "
+              "(DESIGN.md §8; None = skipped by work cap)")
+        krows = kernels_bench.rows()
+        kernels_bench.print_rows(krows)
+        print()
+        if args.kernels_json_out:
+            import jax
+            with open(args.kernels_json_out, "w") as f:
+                json.dump({"section": "kernels", "unit": "us_per_call",
+                           "platform": jax.default_backend(),
+                           "rows": krows}, f, indent=1)
+            print(f"[kernels] wrote {args.kernels_json_out}")
+        print()
+
     if "dist" in sections:
         from benchmarks import distributed
         print("[dist] shardmap (inferred shardings) vs replicated "
@@ -196,6 +222,8 @@ def main() -> None:
                                      "sharded_dense_arrays": k}
                                     for n, a, b, k in rows]}, f, indent=1)
             print(f"[dist] wrote {args.dist_json_out}")
+        if args.check and distributed.check_rows(rows, args.scale):
+            check_failed = True
 
     if check_failed:
         sys.exit(1)

@@ -40,6 +40,15 @@ def main():
     dp = compile_distributed(cp, mesh, ("data",), mode="shardmap")
     ranks = np.asarray(dp.run(ins)["P"])
     single = np.asarray(cp.run(ins)["P"])
+    # the operator-selection subsystem (DESIGN.md §8) resolved each
+    # group-by's backend at trace time; after a run, explain() carries a
+    # `selected:` line per reduce node — surface just those decisions
+    print("trace-time decisions per node (op_select backends for the "
+          "group-bys,\nfast-path materializations for the stores):")
+    for line in cp.explain().splitlines():
+        if "selected:" in line:
+            print("  " + line.strip())
+    print()
     print(f"pagerank: top vertex {ranks.argmax()} rank={ranks.max():.5f} "
           f"(dist vs single max err {np.abs(ranks - single).max():.2e})")
     # REP-everything fallback: same result, replicated placement

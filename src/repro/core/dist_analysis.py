@@ -265,6 +265,50 @@ def round_axis(node) -> Optional[str]:
     return None
 
 
+_ALIGNED_DEST_NODES = (P.MapExpr, P.Scatter, P.AxisReduce, P.EinsumContract,
+                       P.TiledMatmul)
+
+
+def _benefits_from_sharding(node, name: str) -> bool:
+    """Does THIS node's use of `name` ever exploit a ONED_ROW placement?
+    True for a destination that can run an aligned (collective-free)
+    store/reduce round, and for a read the round can serve from the local
+    block.  An unaligned reduce destination (SegmentReduce: computed
+    keys) and a gathered read never benefit — sharding them only changes
+    the exchange/placement cost."""
+    axis = round_axis(node)
+    if axis is None:
+        return False
+    if getattr(node, "dest", None) == name:
+        return isinstance(node, _ALIGNED_DEST_NODES) and \
+            leading_key_var(node) == axis
+    return name in aligned_reads(node, axis)
+
+
+def demotable_dests(nodes, prog: Program) -> dict:
+    """Dense arrays whose EVERY plan use is placement-neutral (unaligned
+    reduce destination or cross-shard read): the distributed runtime may
+    freely demote them to REP when op_select.choose_reduce_dest says a
+    sharded destination doesn't pay for their size (DESIGN.md §8) —
+    demotion never forfeits an aligned round and never changes results
+    (REP is the lattice ⊥, correct everywhere).  Returns {name: ⊕} — the
+    monoid of a reduce writing the array ("+" when it is only read), so
+    the placement decision is keyed on the real exchange it replaces."""
+    dense = dense_arrays(prog)
+    keep: set = set()
+    ops: dict = {}
+    for n in _all_nodes(nodes):
+        if isinstance(n, P.SeqLoop):
+            continue
+        touched = set(gathers_of(n)) | {getattr(n, "dest", None)}
+        if getattr(n, "dest", None) in dense and hasattr(n, "op"):
+            ops.setdefault(n.dest, n.op)
+        for name in touched & dense:
+            if _benefits_from_sharding(n, name):
+                keep.add(name)
+    return {name: ops.get(name, "+") for name in dense - keep}
+
+
 def _dest_cap(node) -> Optional[Dist]:
     """Best distribution the distributed executor can PRODUCE for this
     node's destination; None when the destination is a scalar."""

@@ -18,9 +18,16 @@ parameters (lower.ExecContext), not lowerer state.
     aligned reduce round   AxisReduce/EinsumContract/TiledMatmul keyed by
                            the round axis: local partial-⊕ into the local
                            block; no collective.
-    unaligned reduce round local partial-⊕ over the shard, then `psum`
-                           (REP destination), or `psum_scatter` /
-                           allreduce+slice (ONED_ROW destination) — the
+    unaligned reduce round local partial-⊕ into a dense [K(, D)] partial
+                           BEFORE any exchange, then `psum` (REP
+                           destination), or — per the operator-selection
+                           subsystem (op_select.py, DESIGN.md §8) —
+                           `psum_scatter` / allreduce+slice (ONED_ROW
+                           destination), the decision keyed on (K, D, ⊕,
+                           shard count, shard-local rows).  The partial
+                           itself is computed by whichever SegmentReduce
+                           backend the selector picks for the SHARD-LOCAL
+                           (N/P, K) shape class.  This is the
                            reduction-based replacement for the paper's
                            shuffle-based group-by.
     replicated             everything else — identical on all shards; also
@@ -94,6 +101,17 @@ class DistributedProgram:
             {a: Dist.REP for a in cp.dists}
         self.placements = {a: min(d, Dist.ONED_ROW)
                            for a, d in self.dists.items()}
+        # arrays the plan only ever touches as unaligned reduce dests /
+        # cross-shard reads: place() may demote them to REP per run when
+        # the op_select cost model says a sharded destination doesn't pay
+        # for their concrete size (dense-partial + reduce-scatter vs
+        # local-scatter + psum, DESIGN.md §8).  Placement-only: results
+        # never change, and arrays with any aligned use are never touched.
+        from .dist_analysis import demotable_dests
+        self._demotable = demotable_dests(cp.plan, cp.program) \
+            if shard_dense else {}
+        self._base_placements = dict(self.placements)
+        self._demoted: dict = {}        # name → Decision, per run
         # compiled shard_map round per (node, strategy, static params):
         # SeqLoop iterations and repeated run() calls reuse the traced
         # round instead of paying trace+compile every time
@@ -127,6 +145,28 @@ class DistributedProgram:
         out = {}
         bag_limits: dict[str, int] = {}
         array_limits: dict[str, int] = {}
+        # per-run placement decision for demotion-neutral reduce dests
+        # (shapes are known here): shard vs replicate is an op_select call
+        self.placements = dict(self._base_placements)
+        self._demoted = {}
+        import numpy as _np
+        for name, t in self.cp.program.params.items():
+            if t.kind not in ("vector", "matrix", "map") \
+                    or name not in self._demotable \
+                    or not self._placed_oned(name):
+                continue
+            shp = _np.shape(inputs[name])
+            if not shp:
+                continue
+            d_rest = 1
+            for d_ in shp[1:]:
+                d_rest *= int(d_)
+            dec = self.cp.selector.choose_reduce_dest(
+                k=int(shp[0]), d=d_rest, op=self._demotable[name],
+                nshards=self.dp_n)
+            if dec.backend == "replicate":
+                self.placements[name] = Dist.REP
+                self._demoted[name] = dec
         for name, t in self.cp.program.params.items():
             v = inputs[name]
             if t.kind == "bag":
@@ -171,13 +211,17 @@ class DistributedProgram:
             return jax.lax.pmax(part, self.dp)
         raise NotImplementedError(op)
 
-    def _combine_shard(self, part, op: str, shard, dest_oned: bool):
+    def _combine_shard(self, part, op: str, shard, dest_oned: bool,
+                       exchange: str = "psum_scatter"):
         """Cross-shard ⊕ of an unaligned partial: psum for a replicated
-        destination; reduce-scatter (or allreduce + local slice for non-+
-        monoids) when the destination lives as row blocks."""
+        destination; for a row-block destination the exchange the
+        operator-selection subsystem chose — reduce-scatter (each shard
+        receives its K/P rows) or allreduce + local slice (the only
+        correct form for non-+ monoids, which have no reduce-scatter
+        primitive)."""
         if not dest_oned:
             return self._psum(part, op)
-        if op == "+":
+        if op == "+" and exchange == "psum_scatter":
             return jax.lax.psum_scatter(part, self.dp, scatter_dimension=0,
                                         tiled=True)
         full = self._psum(part, op)
@@ -266,7 +310,7 @@ class DistributedProgram:
                           and self._placed_oned(n)
                           and self._rows(n, env) == axis_rows)
         return {"parts": parts, "kinds": kinds, "axis": axis, "rng": rng,
-                "local": local}
+                "local": local, "axis_rows": axis_rows}
 
     def _exec_shardmap(self, nodes, env, limits, array_limits):
         cp = self.cp
@@ -335,6 +379,26 @@ class DistributedProgram:
             else P()
             for p, k in zip(parts, kinds))
 
+        # operator selection for the round's exchanges (DESIGN.md §8): the
+        # cross-shard ⊕ of every unaligned reduce part is a cost-model /
+        # autotune decision keyed on (K, D, op, shard count, shard-local
+        # rows, dest sharding) — dense-partial + reduce-scatter vs
+        # allreduce + local slice.  Static at round-build time (shapes are
+        # concrete here), so the choice is part of the traced round and of
+        # its cache key.
+        n_loc = (spec["axis_rows"] or self.dp_n) // self.dp_n
+        exchanges = {}
+        for p, k in zip(parts, kinds):
+            if k == "reduce":
+                shp = jnp.shape(env[p.dest])
+                d_rest = 1
+                for d_ in shp[1:]:
+                    d_rest *= int(d_)
+                exchanges[p.dest] = self.cp.selector.choose_exchange(
+                    k=int(shp[0]) if shp else 1, d=d_rest, op=p.op,
+                    nshards=self.dp_n, n_local=n_loc,
+                    dest_dist="ONED_ROW" if dest_oned[p.dest] else "REP")
+
         # everything local_fn closes over, so the traced round is reusable
         cache_key = (id(node), tuple(kinds), tuple(names),
                      tuple(store_dests), gathered, tuple(sorted(local)),
@@ -342,7 +406,10 @@ class DistributedProgram:
                      tuple(sorted(arr_lims.items())),
                      tuple(sorted(dims.items())),
                      dest_shapes, dest_dtypes,
-                     spec["axis"], spec["rng"])
+                     spec["axis"], spec["rng"],
+                     tuple(sorted(self._demoted)),
+                     tuple(sorted((d, x.backend)
+                                  for d, x in exchanges.items())))
         fn = self._round_cache.get(cache_key)
         if fn is not None:
             results = fn(*args)
@@ -357,7 +424,9 @@ class DistributedProgram:
         desc = []
         for p, k in zip(parts, kinds):
             if k == "reduce":
-                coll = "psum_scatter" if dest_oned[p.dest] else "psum"
+                x = exchanges[p.dest]
+                coll = f"{x.backend}[{x.source}]" if dest_oned[p.dest] \
+                    else "psum"
                 desc.append(f"reduce({coll})→{p.dest}")
             else:
                 desc.append(f"{k}→{p.dest}")   # store/aligned: no collective
@@ -383,7 +452,8 @@ class DistributedProgram:
                      _bags=tuple(bagnames), _gather=gathered,
                      _local=tuple(local), _lims=node_lims, _alims=arr_lims,
                      _dims=dims, _shapes=dest_shapes, _dtypes=dest_dtypes,
-                     _axis=axis, _rng=rng):
+                     _axis=axis, _rng=rng,
+                     _exch={d: x.backend for d, x in exchanges.items()}):
             e2 = dict(zip(_names + _stores, vals))
             e2.update(_dims)
             # globalize indexes: shard-local row r is offset + r (needed
@@ -429,7 +499,8 @@ class DistributedProgram:
                                       frozenset(cert))
                     part_res = cp.executor.run_node(p, e2, ctx)
                     outs.append(self._combine_shard(
-                        part_res, p.op, shard, dest_oned[p.dest]))
+                        part_res, p.op, shard, dest_oned[p.dest],
+                        _exch.get(p.dest, "psum_scatter")))
             return tuple(outs)
 
         fn = jax.jit(shard_map(local_fn, mesh=self.mesh,
@@ -477,6 +548,10 @@ class DistributedProgram:
         depends on runtime row counts, so call after run()."""
         out = [f"== distributed rounds: {self.cp.program.name} "
                f"({self.dp_n} shards over {self.dp}, mode={self.mode}) =="]
+        if self._demoted:
+            out.append("placement: " + ", ".join(
+                f"{n}→REP (dest-{d.backend}[{d.source}])"
+                for n, d in sorted(self._demoted.items())))
         self._round_lines(self.cp.plan, 0, out)
         return "\n".join(out)
 

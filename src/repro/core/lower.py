@@ -17,10 +17,17 @@ Node → JAX mapping:
                   masks or scatters (guard: extents cover the destination
                   exactly) — else the general MapExpr path
   Scatter         .at[].set at computed keys, OOB rows dropped
-  SegmentReduce   scatter-⊕ straight into the destination with native drop
-                  semantics (no identity segment array, no index
-                  flattening), or the Pallas one-hot-MXU segment kernel
-                  (backend="pallas")
+  SegmentReduce   one of four backends, chosen at trace time by the
+                  operator-selection subsystem (op_select.py, DESIGN.md
+                  §8) from the node's candidate set: native scatter-⊕
+                  with drop semantics (no identity segment array, no
+                  index flattening), sort-based jax.ops.segment_⊕ over
+                  sorted keys, one-hot dot_general on the MXU, or the
+                  Pallas blocked one-hot kernel.  `backend="auto"`
+                  resolves via the cost model / autotune cache against
+                  the concrete (N, K, D, dtype, dest-sharding) shape
+                  class; a concrete backend name pins the choice.  The
+                  resolved decision is recorded (explain() prints it)
   AxisReduce      ⊕-reduce over contracted axes (Rule 17: no shuffle); a
                   `product` certificate contracts via jnp.einsum instead of
                   the dense grid (same operator, MXU materialization)
@@ -176,13 +183,22 @@ _EMPTY_CTX = ExecContext()
 # ---------------------------------------------------------------------------
 
 class PlanExecutor:
-    def __init__(self, prog: Program):
+    def __init__(self, prog: Program, selector=None):
         self.prog = prog
         # id(node) → the materialization the executor last chose for it
-        # ("einsum", "mxu-einsum", "dense-store", "dense-grid", …).  Written
-        # at trace time; DistributedProgram.explain_rounds() reads it to
-        # report the ACTUAL per-shard operator of each compiled round.
+        # ("einsum", "mxu-einsum", "dense-store", "segment:scatter[cost]",
+        # …).  Written at trace time; CompiledProgram.explain() and
+        # DistributedProgram.explain_rounds() read it to report the ACTUAL
+        # operator/backend of each compiled node or per-shard round.
         self.decisions: dict = {}
+        self._selector = selector
+
+    @property
+    def selector(self):
+        if self._selector is None:
+            from .op_select import OpSelector
+            self._selector = OpSelector()
+        return self._selector
 
     def note(self, node, tag: str) -> None:
         self.decisions[id(node)] = tag
@@ -511,6 +527,25 @@ class PlanExecutor:
         return dest.at[tuple(kk)].set(val.astype(dest.dtype), mode="drop")
 
     # ---- reductions ----
+    def _segment_backend(self, node: P.SegmentReduce, n_rows, dest):
+        """Resolve the group-by backend for this node at trace time: a
+        pinned backend is honored verbatim; "auto" asks the selector with
+        the concrete shape class (rows reduced, flattened segment count,
+        dtype, and the destination's analyzed sharding)."""
+        if node.backend != "auto":
+            self.note(node, f"segment:{node.backend}[pinned]")
+            return node.backend
+        kflat = 1
+        for d_ in dest.shape:
+            kflat *= int(d_)
+        sh = (node.shardings or {}).get(node.dest)
+        dec = self.selector.choose_segment(
+            n=int(n_rows), k=kflat, d=1, op=node.op, dtype=str(dest.dtype),
+            dest_dist=sh.dist.name if sh is not None else "REP",
+            candidates=node.candidates)
+        self.note(node, f"segment:{dec.backend}[{dec.source}]")
+        return dec.backend
+
     def _exec_segment(self, node: P.SegmentReduce, env, ctx):
         ax, binding, conds, base = self.build_space(node.space, env, ctx)
         dest = env[node.dest]
@@ -524,20 +559,28 @@ class PlanExecutor:
         kk = [jnp.broadcast_to(jnp.asarray(k, jnp.int32), shape)
               for k in keys]
         lim0 = ctx.array_limits.get(node.dest)
-        if node.backend == "pallas":
-            # Pallas one-hot-MXU segment kernel as the group-by backend
+        n_rows = 1
+        for d_ in shape:
+            n_rows *= d_
+        backend = self._segment_backend(node, n_rows, dest)
+        if backend != "scatter":
+            # flattened-segment backends (sort / onehot / pallas): ravel
+            # the key tuple against the physical dims, route every dropped
+            # row (OOB key, negative key, padded row, failed condition) to
+            # the sentinel segment `num`, reduce into a [num] partial and
+            # ⊕-combine with the destination.  Empty segments carry the ⊕
+            # identity in the partial, so the combine leaves them alone.
             flat, num = self._ravel_keys([k.reshape(-1) for k in kk],
                                          dest.shape, limit0=lim0)
             if m is not None:
                 flat = jnp.where(m.reshape(-1), flat, num)  # dropped
-            from ..kernels import ops as kops
-            seg = kops.segment_sum(flat, val.reshape(-1)[:, None]
-                                   .astype(jnp.float32), num)[:, 0]
+            vflat = val.reshape(-1).astype(dest.dtype)
+            seg = self._segment_flat(backend, flat, vflat, num, node.op)
             return COMBINE[node.op](
                 dest, seg.reshape(dest.shape).astype(dest.dtype))
-        # dense fast path: scatter-⊕ straight into the destination with
-        # native drop semantics — no identity-filled segment array, no
-        # index flattening.  The scatter's own UPPER bounds check is the
+        # native scatter-⊕ straight into the destination with drop
+        # semantics — no identity-filled segment array, no index
+        # flattening.  The scatter's own UPPER bounds check is the
         # paper's §3.4 OOB-write-drops semantics; negative keys need an
         # explicit sentinel (jax normalizes them to end-relative indices
         # BEFORE the mode="drop" check), as do the logical dim-0 bound
@@ -553,6 +596,40 @@ class PlanExecutor:
         kk[0] = jnp.where(drop, dest.shape[0], kk[0])
         return _scatter_op(dest.at[tuple(kk)], node.op)(
             val.astype(dest.dtype), mode="drop")
+
+    def _segment_flat(self, backend: str, ids, vals, num: int, op: str):
+        """[N]-flat segment-⊕ partial via the chosen backend.  `ids` ==
+        `num` marks dropped rows; the partial's row i is the ⊕ of all
+        vals whose id == i, with the ⊕ identity for empty segments."""
+        if backend == "sort":
+            # sort-based: jax.ops.segment_⊕ over sorted ids (the classic
+            # GPU/TPU shape).  num+1 segments so the sentinel rows land in
+            # a discard row — deterministic drop without scatter modes.
+            order = jnp.argsort(ids)
+            seg = {"+": jax.ops.segment_sum, "min": jax.ops.segment_min,
+                   "max": jax.ops.segment_max,
+                   "*": jax.ops.segment_prod}[op]
+            return seg(vals[order], ids[order], num_segments=num + 1,
+                       indices_are_sorted=True)[:num]
+        if backend == "onehot":
+            # group-by as matmul: [N, num] one-hot × [N] values on the
+            # MXU.  Integer values take the exact-int path (int32
+            # accumulation); floats accumulate in f32.  Sentinel rows'
+            # VALUES must be zeroed too: their one-hot row is all zeros,
+            # but 0 × inf/NaN would still contaminate the dot — dropped
+            # rows may carry non-finite values (e.g. a condition guarding
+            # a division), and drop semantics say they contribute nothing
+            acc = vals.dtype if jnp.issubdtype(vals.dtype, jnp.integer) \
+                else jnp.float32
+            vals = jnp.where(ids == num, jnp.zeros((), vals.dtype), vals)
+            oh = (ids[:, None] == jnp.arange(num)[None, :]).astype(acc)
+            return jax.lax.dot_general(
+                vals.astype(acc)[None, :], oh, (((1,), (0,)), ((), ())),
+                preferred_element_type=acc)[0]
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            return kops.segment_reduce(ids, vals, num, op=op)
+        raise RejectionError(f"unknown segment backend {backend!r}")
 
     def _ravel_keys(self, kk, dshape, limit0=None):
         """Flatten index tuples against the PHYSICAL dims (strides must
@@ -809,7 +886,10 @@ class PlanExecutor:
     def _exec_einsum(self, node: P.EinsumContract, env, ctx):
         ax, binding, conds, base = self.build_space(node.space, env, ctx)
         partial = None
-        if self._mxu_masks_ok(node.space, node.key_axes, ctx):
+        # the candidate set IS the guard chain; op_select="force:dense-grid"
+        # narrows it to the fallback, skipping the einsum attempt entirely
+        if "einsum" in node.candidates and \
+                self._mxu_masks_ok(node.space, node.key_axes, ctx):
             if node.product is not None:
                 partial = self._product_partial(node.product, node.key_axes,
                                                 ax, binding, env, ctx)
@@ -848,10 +928,27 @@ class PlanExecutor:
                                    ax, binding, ctx)
         if rhs is None:
             return self.run_node(ein, env, ctx)
+        # packed lhs, guards passed: op_select decides whether the
+        # block-sparse Pallas kernel or unpack+einsum contracts — the
+        # former wins on the target MXU, the latter everywhere Pallas
+        # would run in (python-level) interpret mode.  Both consume the
+        # packed representation; only the materialization differs.  A
+        # single-element candidate set (op_select="force:<b>") is honored
+        # verbatim.
+        if len(node.candidates) == 1:
+            choice, src = node.candidates[0], "pinned"
+        else:
+            dec = self.selector.choose_contract(
+                m=int(lhs.shape[0]), k=int(lhs.shape[1]),
+                n=int(rhs.shape[1]), candidates=node.candidates)
+            choice, src = dec.backend, dec.source
+        if choice == "unpack-einsum":
+            self.note(node, f"tiled:unpack-einsum[{src}]")
+            return self.run_node(ein, env, ctx)
+        self.note(node, f"tiled:pallas-tiled[{src}]")
         res = matmul_tiled(lhs, rhs)
         for o in ein.product.others:
             res = res * self.eval(o, env, ax, binding, [], ctx)
-        self.note(node, "pallas-tiled")
         dest = env[node.dest]
         return self._keyed_combine(dest, res, ein.key_axes, ax, binding,
                                    "+", in_key_order=True,
@@ -920,25 +1017,36 @@ class PlanExecutor:
 class CompiledProgram:
     def __init__(self, prog: Program, target, optimize_contractions=True,
                  use_kernels=False, infer_distributions=True,
-                 dense_fastpath=True):
+                 dense_fastpath=True, op_select="cost",
+                 autotune_cache=None):
         self.program = prog
         self.target = target
+        from .op_select import CACHE_FILE, OpSelector
+        if autotune_cache is None:
+            autotune_cache = CACHE_FILE
         self.config = PlanConfig(optimize_contractions=optimize_contractions,
                                  use_kernels=use_kernels,
                                  infer_distributions=infer_distributions,
-                                 dense_fastpath=dense_fastpath)
+                                 dense_fastpath=dense_fastpath,
+                                 op_select=op_select,
+                                 autotune_cache=autotune_cache)
         self.plan = plan_program(target, prog, self.config)
         from .dist_analysis import collect
         self.dists = collect(self.plan)   # array → Dist (pass-8 annotations)
-        self.executor = PlanExecutor(prog)
+        self.selector = OpSelector(op_select, cache_path=autotune_cache)
+        self.executor = PlanExecutor(prog, self.selector)
 
     def pretty_target(self) -> str:
         return "\n".join(pretty(s) for s in self.target)
 
     def explain(self, tiled=()) -> str:
         """Spark-EXPLAIN-style dump of the chosen physical operator per
-        statement.  `tiled` names params assumed to arrive §5-packed."""
-        return P.explain(self.plan, self.program.name, tiled)
+        statement.  `tiled` names params assumed to arrive §5-packed.
+        After a run(), nodes whose backend the operator-selection
+        subsystem resolved at trace time carry a `selected:` line (e.g.
+        ``selected: segment:scatter[cost]``)."""
+        return P.explain(self.plan, self.program.name, tiled,
+                         decisions=self.executor.decisions)
 
     # -- public execution interface (distributed.py consumes this) --
     def execute(self, env: dict, *, bag_offsets=None, bag_limits=None,
@@ -980,19 +1088,31 @@ def compile_program(fn_or_prog, *, restrictions=True,
                     optimize_contractions=True,
                     use_kernels=False,
                     infer_distributions=True,
-                    dense_fastpath=True) -> CompiledProgram:
+                    dense_fastpath=True,
+                    op_select="cost",
+                    autotune_cache=None) -> CompiledProgram:
     """Front door: loop program → restrictions check (Def. 3.1) →
     comprehension translation (Fig. 2) → pass pipeline (passes.py) →
-    executable physical plan.  use_kernels=True routes +-group-bys through
-    the Pallas one-hot-MXU segment kernel (interpret-mode off-TPU);
-    infer_distributions=False pins every array to REP (replicated — the
-    pre-analysis distributed behaviour); dense_fastpath=False disables the
-    executor specialization pass (DenseMap / MXU AxisReduce / columnar
-    certificates) — operators then always materialize the general way."""
+    executable physical plan.
+
+    op_select picks the group-by-⊕ backend policy (DESIGN.md §8):
+    "cost" (default) resolves each SegmentReduce's backend from the
+    analytical shape-class cost model at trace time; "autotune" measures
+    every candidate once per shape class and persists the winner to
+    `autotune_cache` (default `.repro_autotune.json`, reloaded by later
+    sessions and CI); "force:<backend>" pins one backend everywhere its
+    candidate set allows (A/B tests).  use_kernels=True is the legacy
+    flag form of "force:pallas" (the one-hot-MXU segment kernel;
+    interpret-mode off-TPU).  infer_distributions=False pins every array
+    to REP (replicated — the pre-analysis distributed behaviour);
+    dense_fastpath=False disables the executor specialization pass
+    (DenseMap / MXU AxisReduce / columnar certificates) — operators then
+    always materialize the general way."""
     prog = fn_or_prog if isinstance(fn_or_prog, Program) \
         else fn_or_prog.program
     if restrictions:
         check_restrictions(prog)
     target = translate(prog)
     return CompiledProgram(prog, target, optimize_contractions, use_kernels,
-                           infer_distributions, dense_fastpath)
+                           infer_distributions, dense_fastpath, op_select,
+                           autotune_cache)

@@ -38,15 +38,23 @@ contract (see DESIGN.md):
                                 sharding (REP ≤ ONED_ROW ≤ TWOD_BLOCK) over
                                 the finished plan; annotation-only
                                 (dist_analysis.py, DESIGN.md §6)
+ 10. operator-selection         backend CANDIDATE sets on SegmentReduce
+                                (scatter / sort / onehot / pallas) and the
+                                contraction nodes; the concrete choice is
+                                resolved at trace time by the cost-model /
+                                autotune selector (op_select.py, DESIGN.md
+                                §8); annotation-only
 
 Passes 2-6 must run in this order: classification consumes rewritten reads,
 dense-fastpath recognizes products on AxisReduce nodes from 3, einsum
 promotes that recognition to EinsumContract nodes, tiled-fusion consumes
 EinsumContract nodes.  Passes 7-8 are cleanups over the final operator
 choice and must run last among the transforms (fusion would otherwise hide
-stores from the deadness scan).  Pass 9 transforms nothing — it must see
-the FINAL operator choices (a Fused round places all its parts, an
-eliminated store constrains nothing), so it runs after everything else.
+stores from the deadness scan).  Passes 9-10 transform nothing — they must
+see the FINAL operator choices (a Fused round places all its parts, an
+eliminated store constrains nothing), so they run after everything else;
+10 follows 9 because a backend's shape class includes the destination's
+inferred sharding.
 """
 from __future__ import annotations
 
@@ -62,9 +70,12 @@ from .loop_ast import (BinOp, Call, Const, Index, Program, RejectionError,
 @dataclass(frozen=True)
 class PlanConfig:
     optimize_contractions: bool = True   # False = paper-faithful plans
-    use_kernels: bool = False            # +-group-bys via Pallas segment kernel
+    use_kernels: bool = False            # legacy: force the Pallas segment
+    #                                      kernel (= op_select "force:pallas")
     infer_distributions: bool = True     # False = REP-everything annotations
     dense_fastpath: bool = True          # False = no executor specialization
+    op_select: str = "cost"              # "cost" | "autotune" | "force:<b>"
+    autotune_cache: str = ".repro_autotune.json"   # on-disk decision cache
 
 
 # ---------------------------------------------------------------------------
@@ -293,9 +304,7 @@ def pass_classify_keys(nodes: list, prog, config) -> list:
             if ka is not None:
                 return P.AxisReduce(n.stmt, n.space, n.reads, n.dest,
                                     tuple(ka), n.op, n.value)
-            if config.use_kernels and n.op == "+":
-                n.backend = "pallas"
-            return n
+            return n      # backend chosen by pass 10 (operator-selection)
         if isinstance(n, P.Scatter):
             ka = _axis_keys(n.keys, n.space)
             if ka is not None and set(ka) == set(n.space.axis_vars):
@@ -654,6 +663,51 @@ def pass_distribution(nodes: list, prog, config) -> list:
 
 
 # ---------------------------------------------------------------------------
+# pass 10: operator selection (annotation-only; see op_select.py)
+# ---------------------------------------------------------------------------
+
+def pass_select_backend(nodes: list, prog, config) -> list:
+    """Attach the backend CANDIDATE SET to every node that has more than
+    one correct materialization (SegmentReduce today; EinsumContract /
+    TiledMatmul carry their guard chains as declared candidates).  The
+    concrete choice is deferred to trace time (`backend="auto"`), when the
+    selector (op_select.OpSelector — cost model or autotune cache) sees
+    the concrete (N, K, D, dtype, dest-sharding) shape class.  Runs after
+    distribution analysis because the shape class includes the
+    destination's inferred sharding.  The legacy `use_kernels=True` flag
+    (the pre-subsystem static choice) maps to pinning `pallas`; an
+    `op_select="force:<backend>"` config pins that backend on every node
+    whose candidate set contains it (tests / A-B benchmarks)."""
+    forced = None
+    if config.use_kernels:
+        forced = "pallas"
+    elif config.op_select.startswith("force:"):
+        forced = config.op_select.split(":", 1)[1]
+
+    def fix(n):
+        if isinstance(n, P.Fused):
+            # this pass runs AFTER update-fusion (it needs pass 9's
+            # shardings), so it must reach the reduces inside Fused rounds
+            n.parts = [fix(p) for p in n.parts]
+            return n
+        if isinstance(n, P.SegmentReduce):
+            from .op_select import SEGMENT_CANDIDATES
+            n.candidates = SEGMENT_CANDIDATES.get(n.op, ("scatter",))
+            if forced is not None and forced in n.candidates:
+                n.backend = forced
+            else:
+                n.backend = "auto"
+            return n
+        if isinstance(n, P.TiledMatmul):
+            fix(n.contract)      # the dense-lhs resolution shares the pin
+        if isinstance(n, (P.EinsumContract, P.TiledMatmul)) \
+                and forced is not None and forced in n.candidates:
+            n.candidates = (forced,)
+        return n
+    return _map_nodes(nodes, fix)
+
+
+# ---------------------------------------------------------------------------
 # the pipeline
 # ---------------------------------------------------------------------------
 
@@ -666,6 +720,7 @@ PIPELINE = (
     ("dead-store-elimination", pass_dead_stores),
     ("update-fusion", pass_fuse_updates),
     ("distribution-analysis", pass_distribution),
+    ("operator-selection", pass_select_backend),
 )
 
 

@@ -182,7 +182,13 @@ class Scatter:
 @dataclass
 class SegmentReduce:
     """Group-by on computed keys → segment-⊕ into the destination index
-    space (the paper's shuffle, as a scatter-⊕ or the Pallas kernel)."""
+    space (the paper's shuffle).  `candidates` is the backend candidate
+    set the operator-selection pass attached (op_select.py, DESIGN.md §8):
+    scatter-⊕ / sort-based segment reduce / one-hot dot_general / the
+    Pallas MXU kernel.  `backend="auto"` defers the choice to the
+    cost-model/autotune selector at trace time (shapes are known there);
+    any concrete name pins it.  The executor records the resolved choice —
+    explain() prints it as a `selected:` line after a run."""
     stmt: Any
     space: IterSpace
     reads: frozenset
@@ -190,11 +196,14 @@ class SegmentReduce:
     keys: tuple[Expr, ...]
     op: str
     value: Expr
-    backend: str = "scatter"     # "scatter" | "pallas"
+    backend: str = "scatter"     # "auto" | one of `candidates`
+    candidates: tuple[str, ...] = ("scatter",)
     shardings: Optional[dict] = None   # dist_analysis annotation
 
     def describe(self) -> str:
-        return (f"SegmentReduce({self.op}, backend={self.backend})"
+        b = self.backend if self.backend != "auto" else \
+            "auto{" + "|".join(self.candidates) + "}"
+        return (f"SegmentReduce({self.op}, backend={b})"
                 f"[{self.space.pretty()}] → {self.dest}")
 
 
@@ -249,6 +258,7 @@ class EinsumContract:
     scalars: tuple[Expr, ...] = ()        # axis-free factors (terms mode)
     terms: Optional[tuple] = None         # ((sign, Expr, EinsumFactors|None), ...)
     fallback: Optional[AxisReduce] = None
+    candidates: tuple[str, ...] = ("einsum", "dense-grid")  # guard chain
     shardings: Optional[dict] = None      # dist_analysis annotation
 
     @property
@@ -279,6 +289,7 @@ class TiledMatmul:
     reads: frozenset
     dest: str
     contract: EinsumContract
+    candidates: tuple[str, ...] = ("pallas-tiled", "unpack-einsum")
     shardings: Optional[dict] = None   # dist_analysis annotation
 
     @property
@@ -375,21 +386,22 @@ def is_reduce(node: PlanNode) -> bool:
 # plan pretty-printer (Spark-EXPLAIN-style)
 # ---------------------------------------------------------------------------
 
-def _node_lines(node: PlanNode, indent: int, tiled, out: list):
+def _node_lines(node: PlanNode, indent: int, tiled, out: list,
+                decisions=None):
     pre = "  " * indent
     if isinstance(node, SeqLoop):
         out.append(f"{pre}{node.describe()}")
         for b in node.body:
-            _node_lines(b, indent + 1, tiled, out)
+            _node_lines(b, indent + 1, tiled, out, decisions)
         return
     if isinstance(node, Fused):
         out.append(f"{pre}{node.describe()}")
         for p in node.parts:
-            _node_lines(p, indent + 1, tiled, out)
+            _node_lines(p, indent + 1, tiled, out, decisions)
         return
     if isinstance(node, TiledMatmul) and node.lhs not in tiled:
         # resolve the runtime representation guard for display
-        _node_lines(node.contract, indent, tiled, out)
+        _node_lines(node.contract, indent, tiled, out, decisions)
         return
     line = f"{pre}{node.describe()}"
     if isinstance(node, EinsumContract) and node.fallback is not None:
@@ -402,16 +414,25 @@ def _node_lines(node: PlanNode, indent: int, tiled, out: list):
     if getattr(node, "shardings", None):
         out.append(f"{pre}    shardings: " + ", ".join(
             f"{k}={v}" for k, v in node.shardings.items()))
+    if decisions:
+        d = decisions.get(id(node))
+        if d is None and isinstance(node, TiledMatmul):
+            d = decisions.get(id(node.contract))
+        if d is not None:
+            out.append(f"{pre}    selected: {d}")
 
 
-def explain(plan: list, name: str = "", tiled=()) -> str:
+def explain(plan: list, name: str = "", tiled=(), decisions=None) -> str:
     """Pretty-print the chosen physical operator per statement.  `tiled`
     names parameters assumed to arrive as §5 packed TiledMatrix inputs,
-    resolving the TiledMatmul-vs-einsum runtime guard for display."""
+    resolving the TiledMatmul-vs-einsum runtime guard for display.
+    `decisions` (id(node) → tag, the executor's trace-time record) adds a
+    `selected:` line per node — the operator-selection subsystem's
+    observable contract (op_select.py): which backend actually ran."""
     out = [f"== physical plan{': ' + name if name else ''} =="]
     for i, node in enumerate(plan):
         sub: list = []
-        _node_lines(node, 0, frozenset(tiled), sub)
+        _node_lines(node, 0, frozenset(tiled), sub, decisions)
         out.append(f"[{i}] {sub[0]}")
         out.extend("    " + s for s in sub[1:])
     return "\n".join(out)

@@ -9,6 +9,7 @@ import jax
 
 from .flash_attention import flash_attention as _flash
 from .selective_scan import selective_scan as _selscan
+from .segment_reduce import segment_reduce as _segred
 from .segment_reduce import segment_sum as _segsum
 from .tile_matmul import tile_matmul as _tilemm
 
@@ -20,6 +21,11 @@ def _interp() -> bool:
 def segment_sum(ids, values, num_segments: int, **kw):
     kw.setdefault("interpret", _interp())
     return _segsum(ids, values, num_segments, **kw)
+
+
+def segment_reduce(ids, values, num_segments: int, *, op: str = "+", **kw):
+    kw.setdefault("interpret", _interp())
+    return _segred(ids, values, num_segments, op=op, **kw)
 
 
 def tile_matmul(a, b, tile_mask=None, **kw):

@@ -1,10 +1,21 @@
-"""Pallas TPU kernel: segment-sum via one-hot MXU matmul.
+"""Pallas TPU kernel: segment-⊕ via one-hot MXU matmul / one-hot select.
 
 This is the TPU-native form of the paper's group-by-⊕: instead of a shuffle
 (Spark) or a scatter (GPU), each [bn] block of segment ids becomes a
-[bn, bk] one-hot matrix that multiplies the [bn, bd] value block on the
-MXU — group-by as matrix multiplication.  Out-of-range ids contribute
-nothing (drop semantics, matching the ◁ merge).
+[bn, bk] one-hot matrix.  For ⊕ = + the one-hot multiplies the [bn, bd]
+value block on the MXU — group-by as matrix multiplication; for ⊕ = min/max
+the one-hot SELECTS into a [bn, bk, bd] identity-filled block that reduces
+over rows on the VPU (size bn·bk·bd·4 bytes must fit VMEM — shrink the
+blocks for large bd).  Out-of-range ids ([num_segments, ∞) and negatives)
+contribute nothing (drop semantics, matching the ◁ merge): padded rows get
+id = Kp which no k-block matches, and ids in [num_segments, Kp) land in
+output rows that are sliced off.
+
+Values may be [N] (returns [num_segments]) or [N, D] (returns
+[num_segments, D]).  Integer values accumulate on an EXACT integer path
+(int32 one-hot × int32 values with preferred_element_type=int32 — no fp32
+rounding); floating values accumulate in float32.  The returned dtype is
+the accumulator's (int32 / float32).
 
 Grid: (K/bk, D/bd, N/bn), N innermost so each output tile accumulates
 across value blocks in VMEM.
@@ -13,55 +24,108 @@ from __future__ import annotations
 
 import functools
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_IDENTITY = {"+": 0.0, "min": np.inf, "max": -np.inf}
 
-def _kernel(ids_ref, val_ref, out_ref, *, bk: int):
+
+def _int_identity(op: str) -> int:
+    if op == "+":
+        return 0
+    big = jnp.iinfo(jnp.int32).max
+    return big if op == "min" else -big
+
+
+def _kernel(ids_ref, val_ref, out_ref, *, bk: int, op: str, acc):
     k = pl.program_id(0)
     n = pl.program_id(2)
+    ident = jnp.asarray(_int_identity(op) if acc == jnp.int32
+                        else _IDENTITY[op], acc)
 
     @pl.when(n == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        out_ref[...] = jnp.full_like(out_ref, ident)
 
     ids = ids_ref[...]                                    # [bn]
-    vals = val_ref[...].astype(jnp.float32)               # [bn, bd]
+    vals = val_ref[...].astype(acc)                       # [bn, bd]
     seg0 = k * bk
-    onehot = (ids[:, None] == (seg0 + jax.lax.broadcasted_iota(
-        jnp.int32, (1, bk), 1))).astype(jnp.float32)      # [bn, bk]
-    out_ref[...] += jax.lax.dot_general(
-        onehot, vals, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)               # [bk, bd]
+    hit = ids[:, None] == (seg0 + jax.lax.broadcasted_iota(
+        jnp.int32, (1, bk), 1))                           # [bn, bk]
+    if op == "+":
+        out_ref[...] += jax.lax.dot_general(
+            hit.astype(acc), vals, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc)                   # [bk, bd]
+    else:
+        # one-hot select: rows not in this segment carry the ⊕ identity,
+        # then reduce over the row axis and merge into the accumulator
+        sel = jnp.where(hit[:, :, None], vals[:, None, :],
+                        ident)                            # [bn, bk, bd]
+        red = jnp.min if op == "min" else jnp.max
+        comb = jnp.minimum if op == "min" else jnp.maximum
+        out_ref[...] = comb(out_ref[...], red(sel, axis=0))
 
 
-@functools.partial(jax.jit, static_argnames=("num_segments", "bn", "bk",
-                                             "bd", "interpret"))
-def segment_sum(ids: jax.Array, values: jax.Array, num_segments: int,
-                *, bn: int = 256, bk: int = 128, bd: int = 128,
-                interpret: bool = True) -> jax.Array:
-    """ids: [N] int32; values: [N, D] -> [num_segments, D] float32."""
+@functools.partial(jax.jit, static_argnames=("num_segments", "op", "bn",
+                                             "bk", "bd", "interpret"))
+def segment_reduce(ids: jax.Array, values: jax.Array, num_segments: int,
+                   *, op: str = "+", bn: int = 256, bk: int = 128,
+                   bd: int = 128, interpret: bool = True) -> jax.Array:
+    """ids: [N] int; values: [N] or [N, D] -> [num_segments(, D)].
+    op ∈ {"+", "min", "max"}.  Integer values take the exact-int path
+    (int32 accumulation); floats accumulate in float32."""
+    if op not in ("+", "min", "max"):
+        raise ValueError(f"segment_reduce: unsupported op {op!r}")
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
     n, d = values.shape
+    acc = jnp.int32 if jnp.issubdtype(values.dtype, jnp.integer) \
+        else jnp.float32
     bn = min(bn, n)
     bk = min(bk, num_segments)
     bd = min(bd, d)
-    # pad to block multiples; padded rows get id = num_segments (dropped)
+    # pad to block multiples; padded rows get id = Kp (matches no k block)
     np_ = -(-n // bn) * bn
     kp = -(-num_segments // bk) * bk
     dp = -(-d // bd) * bd
-    ids_p = jnp.full((np_,), kp, jnp.int32).at[:n].set(ids.astype(jnp.int32))
-    vals_p = jnp.zeros((np_, dp), values.dtype).at[:n, :d].set(values)
+    ident = jnp.asarray(_int_identity(op) if acc == jnp.int32
+                        else _IDENTITY[op], acc)
+    ids32 = ids.astype(jnp.int32)
+    values = values.astype(acc)
+    if op == "+":
+        # dropped rows (id < 0 or ≥ num_segments) hit an all-zero one-hot
+        # row, but 0 × inf/NaN would still contaminate the MXU dot — zero
+        # their values so they contribute nothing regardless of content
+        # (min/max use a pure select, which never multiplies)
+        keep = (ids32 >= 0) & (ids32 < num_segments)
+        values = jnp.where(keep[:, None], values, jnp.zeros((), acc))
+    ids_p = jnp.full((np_,), kp, jnp.int32).at[:n].set(ids32)
+    vals_p = jnp.full((np_, dp), ident, acc).at[:n, :d].set(values)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, bk=bk),
+        functools.partial(_kernel, bk=bk, op=op, acc=acc),
         grid=(kp // bk, dp // bd, np_ // bn),
         in_specs=[
             pl.BlockSpec((bn,), lambda k, dd, nn: (nn,)),
             pl.BlockSpec((bn, bd), lambda k, dd, nn: (nn, dd)),
         ],
         out_specs=pl.BlockSpec((bk, bd), lambda k, dd, nn: (k, dd)),
-        out_shape=jax.ShapeDtypeStruct((kp, dp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((kp, dp), acc),
         interpret=interpret,
     )(ids_p, vals_p)
-    return out[:num_segments, :d]
+    out = out[:num_segments, :d]
+    return out[:, 0] if squeeze else out
+
+
+def segment_sum(ids: jax.Array, values: jax.Array, num_segments: int,
+                *, bn: int = 256, bk: int = 128, bd: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """ids: [N] int32; values: [N, D] -> [num_segments, D] float32.
+    Kept as the historical fp32 entry point; `segment_reduce` is the
+    general (dtype-preserving, [N]-or-[N,D], min/max-capable) form."""
+    return segment_reduce(ids, values.astype(jnp.float32), num_segments,
+                          op="+", bn=bn, bk=bk, bd=bd, interpret=interpret)

@@ -1,13 +1,29 @@
-"""Pure-jnp oracle for the segment_sum kernel."""
+"""Pure-jnp oracles for the segment_reduce kernel."""
 import jax
 import jax.numpy as jnp
 
+_SCATTER = {"+": "add", "min": "min", "max": "max"}
+
+
+def segment_reduce_ref(ids, values, num_segments: int, op: str = "+"):
+    """Same contract as kernels.segment_reduce: [N] or [N, D] values,
+    exact-int accumulation for integer dtypes, f32 for floats, paper
+    empty-bag semantics (negative AND ≥ num_segments ids drop)."""
+    ids = ids.astype(jnp.int32)
+    # negative ids DROP (numpy-style .at[] would wrap them to the end)
+    ids = jnp.where(ids < 0, num_segments, ids)
+    acc = jnp.int32 if jnp.issubdtype(values.dtype, jnp.integer) \
+        else jnp.float32
+    vals = values.astype(acc)
+    if op == "+":
+        init = jnp.zeros((), acc)
+    else:
+        big = jnp.iinfo(acc).max if acc == jnp.int32 else jnp.inf
+        init = jnp.asarray(big if op == "min" else -big, acc)
+    out = jnp.full((num_segments,) + vals.shape[1:], init, acc)
+    return getattr(out.at[ids], _SCATTER[op])(vals, mode="drop")
+
 
 def segment_sum_ref(ids, values, num_segments: int):
-    ids = ids.astype(jnp.int32)
-    # paper empty-bag semantics: negative ids DROP (numpy-style .at[] would
-    # wrap them to the end)
-    ids = jnp.where(ids < 0, num_segments, ids)
-    vals = values.astype(jnp.float32)
-    out = jnp.zeros((num_segments,) + vals.shape[1:], jnp.float32)
-    return out.at[ids].add(vals, mode="drop")
+    return segment_reduce_ref(ids, values.astype(jnp.float32), num_segments,
+                              op="+")

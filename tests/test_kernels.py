@@ -5,13 +5,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:        # the property test is hypothesis-driven; everything else runs
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention_ref import flash_attention_ref
-from repro.kernels.segment_reduce import segment_sum
-from repro.kernels.segment_reduce_ref import segment_sum_ref
+from repro.kernels.segment_reduce import segment_reduce, segment_sum
+from repro.kernels.segment_reduce_ref import (segment_reduce_ref,
+                                              segment_sum_ref)
 from repro.kernels.tile_matmul import tile_matmul
 from repro.kernels.tile_matmul_ref import tile_matmul_ref
 
@@ -43,10 +47,18 @@ def test_segment_sum_out_of_range_dropped():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 60), st.integers(1, 12), st.integers(1, 20),
-       st.integers(0, 2**31 - 1))
-def test_segment_sum_property(n, d, k, seed):
+def _property_cases():
+    """Randomized (n, d, k, seed) cases: hypothesis-generated when the
+    package is available, a fixed seeded sweep otherwise."""
+    if _HAVE_HYPOTHESIS:
+        return None
+    r = np.random.default_rng(2024)
+    return [(int(r.integers(1, 60)), int(r.integers(1, 12)),
+             int(r.integers(1, 20)), int(r.integers(0, 2**31 - 1)))
+            for _ in range(20)]
+
+
+def _check_segment_sum_case(n, d, k, seed):
     r = np.random.default_rng(seed)
     ids = r.integers(0, k, n).astype(np.int32)
     vals = r.standard_normal((n, d)).astype(np.float32)
@@ -54,6 +66,71 @@ def test_segment_sum_property(n, d, k, seed):
     b = segment_sum_ref(jnp.asarray(ids), jnp.asarray(vals), k)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
                                atol=1e-4)
+
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 60), st.integers(1, 12), st.integers(1, 20),
+           st.integers(0, 2**31 - 1))
+    def test_segment_sum_property(n, d, k, seed):
+        _check_segment_sum_case(n, d, k, seed)
+else:
+    @pytest.mark.parametrize("n,d,k,seed", _property_cases())
+    def test_segment_sum_property(n, d, k, seed):
+        _check_segment_sum_case(n, d, k, seed)
+
+
+# ---------------------------------------------------------------------------
+# generalized segment_reduce: natural [N]/[N, D] values, min/max via the
+# one-hot select path, exact-int accumulation, K/D not multiples of the
+# block sizes, and the negative-key sentinel
+# ---------------------------------------------------------------------------
+
+def test_segment_reduce_1d_values():
+    ids = rng.integers(0, 7, 50).astype(np.int32)
+    vals = rng.standard_normal(50).astype(np.float32)
+    a = segment_reduce(jnp.asarray(ids), jnp.asarray(vals), 7, bn=16, bk=4)
+    b = segment_reduce_ref(jnp.asarray(ids), jnp.asarray(vals), 7)
+    assert a.shape == (7,)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("op", ["+", "min", "max"])
+@pytest.mark.parametrize("n,d,k", [(100, 33, 17), (65, 1, 5), (31, 9, 13)])
+def test_segment_reduce_ops_nonmultiple_blocks(op, n, d, k):
+    # K and D deliberately NOT multiples of bk/bd: the pad rows/columns
+    # must never leak the ⊕ identity into kept outputs
+    ids = rng.integers(0, k, n).astype(np.int32)
+    vals = rng.standard_normal((n, d)).astype(np.float32)
+    a = segment_reduce(jnp.asarray(ids), jnp.asarray(vals), k, op=op,
+                       bn=16, bk=8, bd=8)
+    b = segment_reduce_ref(jnp.asarray(ids), jnp.asarray(vals), k, op=op)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("op", ["+", "min", "max"])
+def test_segment_reduce_negative_and_oob_sentinel(op):
+    ids = np.array([0, 3, -1, 99, 2, -7, 1], np.int32)  # -1/-7/99 drop
+    vals = np.arange(1.0, 8.0, dtype=np.float32)
+    a = segment_reduce(jnp.asarray(ids), jnp.asarray(vals), 5, op=op,
+                       bn=4, bk=4)
+    b = segment_reduce_ref(jnp.asarray(ids), jnp.asarray(vals), 5, op=op)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_segment_reduce_exact_int_accumulation():
+    # 16777217 = 2**24 + 1 is not representable in fp32: a fp32-rounding
+    # path would sum 16777216 + 1; the exact-int path must return 2**24+2
+    ids = jnp.asarray(np.zeros(2, np.int32))
+    vals = jnp.asarray(np.array([2**24 + 1, 1], np.int32))
+    a = segment_reduce(ids, vals, 1)
+    assert a.dtype == jnp.int32
+    assert int(a[0]) == 2**24 + 2
+    # min/max on ints keep the integer dtype too
+    m = segment_reduce(ids, vals, 1, op="max")
+    assert m.dtype == jnp.int32 and int(m[0]) == 2**24 + 1
 
 
 @pytest.mark.parametrize("m,k,n,bm", [(64, 32, 48, 32), (100, 70, 90, 32),
