@@ -1,0 +1,193 @@
+"""[dispatch] section: dispatch overhead of the whole-program compilation
+layer (DESIGN.md §9).
+
+Two halves, one artifact (BENCH_dispatch.json):
+
+* single-device (runs in the calling process): per-call time of
+  CompiledProgram.run() in eager (one XLA dispatch per plan node) vs whole
+  (ONE cached XLA computation per shape signature) mode, plus the
+  warm-cache retrace counts — repeat calls with identical shapes must hit
+  the compile cache (`traces` stays 1), which is the near-zero
+  repeat-call dispatch overhead claim made observable.
+
+* distributed (MUST run in a fresh process: forces host devices before jax
+  loads — `python -m benchmarks.dispatch_bench --dist`, which prints one
+  JSON line; benchmarks/run.py spawns it as a subprocess): per-run and
+  per-iteration cost of pagerank and per-call cost of kmeans with round
+  fusion on vs off.  Fused pagerank runs its whole loop as ONE shard_map
+  program with an on-device lax.while_loop (0 host syncs); unfused is the
+  PR-4 behaviour (one jit+shard_map dispatch per body node per iteration
+  plus a blocking host sync on the condition).  Per-iteration time is the
+  drift-immune difference quotient (t(S2) - t(S1)) / (S2 - S1) over
+  interleaved pairs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+sys.path.insert(0, _REPO)
+
+_DIST_MARKER = "DISPATCH_DIST_JSON:"
+
+
+def _time_call(fn, pairs=7, reps=3):
+    """Min µs per call over `pairs` passes of `reps` calls."""
+    import numpy as np
+    for v in fn().values():              # warm-up / compile
+        np.asarray(v)
+    best = float("inf")
+    for _ in range(pairs):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        for v in out.values():
+            np.asarray(v)
+        best = min(best, (time.perf_counter() - t0) / reps * 1e6)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# single-device: eager vs whole per-call overhead + retrace counts
+# ---------------------------------------------------------------------------
+
+def single_rows():
+    import numpy as np
+    from repro.core import compile_program
+    from repro.core.programs import ALL
+
+    rng = np.random.default_rng(3)
+    nv = 64
+    cases = {
+        # small inputs: dispatch overhead dominates the arithmetic
+        "word_count": dict(W=rng.integers(0, nv, 2048).astype(np.float64),
+                           C=np.zeros(nv)),
+        "pagerank": dict(E=(rng.integers(0, nv, 2048).astype(np.float64),
+                            rng.integers(0, nv, 2048).astype(np.float64)),
+                         P=np.full(nv, 1 / nv), NP=np.zeros(nv),
+                         C=np.zeros(nv), N=nv, num_steps=2.0, steps=0.0,
+                         b=0.85),
+        "kmeans_step": dict(P=(rng.standard_normal(512) * 3,
+                               rng.standard_normal(512) * 3),
+                            CX=rng.standard_normal(8),
+                            CY=rng.standard_normal(8), K=8,
+                            D=np.zeros((512, 8)), MinD=np.full(512, 1e30),
+                            Cl=np.zeros(512), SX=np.zeros(8),
+                            SY=np.zeros(8), CN=np.zeros(8), NX=np.zeros(8),
+                            NY=np.zeros(8)),
+        "matrix_factorization_step": dict(
+            R=rng.standard_normal((64, 48)),
+            P=rng.standard_normal((64, 8)) * .1,
+            Q=rng.standard_normal((8, 48)) * .1,
+            Pp=rng.standard_normal((64, 8)) * .1,
+            Qp=rng.standard_normal((8, 48)) * .1,
+            pq=np.zeros((64, 48)), err=np.zeros((64, 48)),
+            n=64, m=48, l=8, a=0.002, lam=0.02),
+    }
+    out = []
+    calls = 10
+    for name, ins in cases.items():
+        eager = compile_program(ALL[name], compile_mode="eager")
+        whole = compile_program(ALL[name])
+        t_eager = _time_call(lambda: eager.run(ins))
+        t_whole = _time_call(lambda: whole.run(ins))
+        before = whole.trace_count
+        for _ in range(calls):
+            whole.run(ins)
+        out.append({"name": name,
+                    "eager_us": round(t_eager, 1),
+                    "whole_us": round(t_whole, 1),
+                    "speedup": round(t_eager / t_whole, 2),
+                    "warm_retraces": whole.trace_count - before,
+                    "cache_hits": whole.cache_hits})
+    return out
+
+
+def print_single(rows):
+    print("name,eager_us,whole_us,speedup,warm_retraces")
+    for r in rows:
+        print(f"{r['name']},{r['eager_us']:.0f},{r['whole_us']:.0f},"
+              f"{r['speedup']:.2f},{r['warm_retraces']}")
+
+
+# ---------------------------------------------------------------------------
+# distributed: round fusion on vs off (fresh process only)
+# ---------------------------------------------------------------------------
+
+def _force_devices():
+    from benchmarks import distributed
+    distributed._force_devices()
+
+
+def dist_rows():
+    import numpy as np
+    from benchmarks.distributed import mesh_devices
+    from repro.core import compile_program
+    from repro.core.distributed import compile_distributed
+    from repro.core.programs import ALL
+    from repro.launch.mesh import make_test_mesh
+    from benchmarks.distributed import _time_pair
+
+    mesh = make_test_mesh((mesh_devices(),), ("data",))
+    rng = np.random.default_rng(23)
+    nv, ne, npts = 128, 1024, 512        # the BENCH_distributed case sizes
+
+    def pr_ins(steps):
+        return dict(E=(rng.integers(0, nv, ne).astype(np.float64),
+                       rng.integers(0, nv, ne).astype(np.float64)),
+                    P=np.full(nv, 1 / nv), NP=np.zeros(nv), C=np.zeros(nv),
+                    N=nv, num_steps=float(steps), steps=0.0, b=0.85)
+
+    out = {"devices": mesh_devices()}
+    s1, s2 = 2, 6
+    per_iter = {}
+    per_run = {}
+    for label, fuse in (("fused", True), ("unfused", False)):
+        cp = compile_program(ALL["pagerank"], round_fusion=fuse)
+        dp = compile_distributed(cp, mesh, ("data",))
+        i1, i2 = pr_ins(s1), pr_ins(s2)
+        t2, t1 = _time_pair(lambda: dp.run(i2), lambda: dp.run(i1))
+        per_run[label] = round(t1, 2)            # num_steps=2: the
+        per_iter[label] = round((t2 - t1) / (s2 - s1), 2)   # PR-4 shape
+    out["pagerank_run_ms"] = per_run             # vs 30.4 ms PR-4 baseline
+    out["pagerank_per_iteration_ms"] = per_iter
+
+    km = dict(P=(rng.standard_normal(npts) * 3,
+                 rng.standard_normal(npts) * 3),
+              CX=rng.standard_normal(8), CY=rng.standard_normal(8), K=8,
+              D=np.zeros((npts, 8)), MinD=np.full(npts, 1e30),
+              Cl=np.zeros(npts), SX=np.zeros(8), SY=np.zeros(8),
+              CN=np.zeros(8), NX=np.zeros(8), NY=np.zeros(8))
+    dp_f = compile_distributed(
+        compile_program(ALL["kmeans_step"]), mesh, ("data",))
+    dp_u = compile_distributed(
+        compile_program(ALL["kmeans_step"], round_fusion=False),
+        mesh, ("data",))
+    tf, tu = _time_pair(lambda: dp_f.run(km), lambda: dp_u.run(km))
+    out["kmeans_per_call_ms"] = {"fused": round(tf, 2),
+                                 "unfused": round(tu, 2)}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dist", action="store_true",
+                    help="distributed half (fresh process: forces host "
+                         "devices); prints one machine-readable JSON line")
+    args = ap.parse_args()
+    if args.dist:
+        _force_devices()
+        rows = dist_rows()
+        print(_DIST_MARKER + json.dumps(rows))
+        return
+    rows = single_rows()
+    print_single(rows)
+
+
+if __name__ == "__main__":
+    main()

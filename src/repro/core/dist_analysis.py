@@ -91,10 +91,12 @@ def dense_arrays(prog: Program) -> frozenset:
 
 
 def leaf_nodes(nodes):
-    """Yield every leaf plan node (Fused parts and SeqLoop bodies opened)."""
+    """Yield every leaf plan node (Fused parts, FusedRound regions and
+    SeqLoop bodies opened)."""
     for n in nodes:
-        if isinstance(n, P.SeqLoop):
-            yield from leaf_nodes(n.body)
+        if isinstance(n, (P.SeqLoop, P.FusedRound)):
+            yield from leaf_nodes(n.body if isinstance(n, P.SeqLoop)
+                                  else n.parts)
         elif isinstance(n, P.Fused):
             yield from n.parts
         else:
@@ -403,6 +405,8 @@ def _all_nodes(nodes):
         if isinstance(n, P.SeqLoop):
             yield n
             yield from _all_nodes(n.body)
+        elif isinstance(n, P.FusedRound):
+            yield from _all_nodes(n.parts)
         elif isinstance(n, P.Fused):
             yield from n.parts
         else:

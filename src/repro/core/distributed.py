@@ -55,6 +55,18 @@ parameters (lower.ExecContext), not lowerer state.
   — the observable contract that generated rounds run jnp.einsum, not the
   dense iteration grid).
 
+  Round fusion (pass 11, DESIGN.md §9): a `plan.FusedRound` region runs
+  as ONE jit+shard_map program — members execute sequentially inside the
+  traced body with their collectives (psum / psum_scatter / all_gather)
+  placed between them, instead of one dispatch per node.  A SeqLoop whose
+  whole body is one region runs as an ON-DEVICE lax.while_loop inside
+  that same program whenever its condition reads only replicated state —
+  zero per-iteration host syncs (the host-driven loop with one blocking
+  condition sync per iteration remains the fallback, and a
+  fully-replicated body short-circuits through the single-device
+  lax.while_loop).  Guard failures fall back to per-member rounds;
+  fusion never changes results, only dispatch.
+
 * ``gspmd``: the single-device plan executed on sharded inputs; XLA's
   SPMD partitioner inserts the collectives.  Works for every program,
   including range-driven contractions (matmul → partitioned einsum).
@@ -114,8 +126,16 @@ class DistributedProgram:
         self._demoted: dict = {}        # name → Decision, per run
         # compiled shard_map round per (node, strategy, static params):
         # SeqLoop iterations and repeated run() calls reuse the traced
-        # round instead of paying trace+compile every time
+        # round instead of paying trace+compile every time.  Fused regions
+        # (plan.FusedRound, pass 11) share the cache; the trace/hit
+        # counters are the compile-cache observability explain_rounds()
+        # reports (DESIGN.md §9)
         self._round_cache: dict = {}
+        self._round_traces = 0
+        self._round_hits = 0
+        # region ids whose fused execution failed a runtime guard THIS run
+        # (per-member fallback taken): don't re-attempt every loop iteration
+        self._fused_bail: set = set()
         # id(node) → human-readable round strategy of the LAST run(), and
         # id(leaf) → the per-shard materialization that round used.  Both
         # refreshed on every node execution — cache-hit rounds restore the
@@ -316,9 +336,42 @@ class DistributedProgram:
         cp = self.cp
         for node in nodes:
             if isinstance(node, plan.SeqLoop):
-                # sequential driver; body nodes distributed recursively
+                # best: the whole loop as ONE shard_map program with an
+                # on-device lax.while_loop (fused body, collectives inside
+                # — zero per-iteration host syncs)
+                if len(node.body) == 1 \
+                        and isinstance(node.body[0], plan.FusedRound) \
+                        and self._exec_fused(node.body[0], env, limits,
+                                             array_limits, loop=node):
+                    continue
+                # next: a fully-replicated body needs no collectives at
+                # all — run the loop through the single-device executor
+                # (one on-device lax.while_loop; the old path paid a
+                # blocking host sync on the condition EVERY iteration)
+                if self._loop_replicated(node, env):
+                    self._strategy[id(node)] = (
+                        "on-device lax.while_loop (replicated body, "
+                        "0 host syncs)")
+                    cp.execute(env, bag_limits=limits,
+                               array_limits=array_limits, nodes=[node])
+                    for b in plan.flatten(node.body):
+                        self._decisions.update(self._part_notes(b))
+                    continue
+                # fallback: host-driven loop, body nodes distributed
+                # recursively with one condition sync per iteration
+                syncs = 0
                 while bool(cp.executor.eval_scalar(node.cond, env)):
+                    syncs += 1
                     self._exec_shardmap(node.body, env, limits, array_limits)
+                self._strategy[id(node)] = \
+                    f"host-driven ({syncs + 1} condition syncs)"
+                continue
+
+            if isinstance(node, plan.FusedRound):
+                if self._exec_fused(node, env, limits, array_limits):
+                    continue
+                # a runtime guard failed: per-member rounds (old behaviour)
+                self._exec_shardmap(node.parts, env, limits, array_limits)
                 continue
 
             spec = self._round_spec(node, env) \
@@ -332,6 +385,21 @@ class DistributedProgram:
                 self._decisions.update(self._part_notes(node))
                 continue
             self._run_round(node, spec, env, limits, array_limits)
+
+    def _loop_replicated(self, node, env) -> bool:
+        """True when every leaf of the SeqLoop body classifies replicated
+        (no round axis anywhere): the whole loop can run as ONE
+        single-device lax.while_loop dispatch instead of a host-driven
+        loop that syncs on the condition every iteration."""
+        for b in plan.flatten(node.body):
+            if isinstance(b, plan.SeqLoop):
+                if not self._loop_replicated(b, env):
+                    return False
+                continue
+            if plan.is_reduce(b) or isinstance(b, _STORE_NODES):
+                if self._round_spec(b, env) is not None:
+                    return False
+        return True
 
     def _run_round(self, node, spec, env, limits, array_limits):
         cp = self.cp
@@ -412,6 +480,7 @@ class DistributedProgram:
                                   for d, x in exchanges.items())))
         fn = self._round_cache.get(cache_key)
         if fn is not None:
+            self._round_hits += 1
             results = fn(*args)
             # restore the trace-time snapshot: the cached round re-runs
             # exactly what was traced, whatever happened in between
@@ -421,31 +490,8 @@ class DistributedProgram:
 
         # trace-time only (cache hits skip it, like the trace itself):
         # record the round strategy + slice certificates for explain_rounds
-        desc = []
-        for p, k in zip(parts, kinds):
-            if k == "reduce":
-                x = exchanges[p.dest]
-                coll = f"{x.backend}[{x.source}]" if dest_oned[p.dest] \
-                    else "psum"
-                desc.append(f"reduce({coll})→{p.dest}")
-            else:
-                desc.append(f"{k}→{p.dest}")   # store/aligned: no collective
-        extras = []
-        if gathered:
-            extras.append("all_gather: " + ",".join(gathered))
-        if local:
-            extras.append("local blocks: " + ",".join(sorted(local)))
-        for p, k in zip(parts, kinds):
-            if k == "aligned":   # per-shard contraction: print the static
-                cert = shard_slice_certificates(   # bounds certificates
-                    p, axis, frozenset(local))
-                extras.append(
-                    f"slice-certs[{p.dest}]: " + (", ".join(
-                        f"{a}={c}" for a, c in sorted(cert.items()))
-                        if cert else "none (dense grid)"))
-        self._strategy[id(node)] = (f"{' + '.join(desc)} over {axis}"
-                                    + ("; " + "; ".join(extras)
-                                       if extras else ""))
+        self._strategy[id(node)] = self._round_desc(
+            parts, kinds, axis, exchanges, dest_oned, gathered, local)
 
         def local_fn(*vals, _parts=parts, _kinds=kinds,
                      _names=tuple(names), _stores=tuple(store_dests),
@@ -507,12 +553,376 @@ class DistributedProgram:
                                in_specs=tuple(in_specs),
                                out_specs=out_specs))
         self._round_cache[cache_key] = fn
+        self._round_traces += 1
         results = fn(*args)              # traces: executor notes decisions
         notes = self._part_notes(node)
         self._round_notes[cache_key] = notes
         self._decisions.update(notes)
         self._strategy_by_key[cache_key] = self._strategy[id(node)]
         self._apply(parts, kinds, results, env)
+
+    def _round_desc(self, parts, kinds, axis, exchanges, dest_oned,
+                    gathered, local) -> str:
+        """The human-readable round strategy explain_rounds() prints —
+        shared between single-node rounds and fused-region members so the
+        observable format is identical in both paths."""
+        desc = []
+        for p, k in zip(parts, kinds):
+            if k == "reduce":
+                x = exchanges[p.dest]
+                coll = f"{x.backend}[{x.source}]" if dest_oned[p.dest] \
+                    else "psum"
+                desc.append(f"reduce({coll})→{p.dest}")
+            else:
+                desc.append(f"{k}→{p.dest}")   # store/aligned: no collective
+        extras = []
+        if gathered:
+            extras.append("all_gather: " + ",".join(gathered))
+        if local:
+            extras.append("local blocks: " + ",".join(sorted(local)))
+        for p, k in zip(parts, kinds):
+            if k == "aligned":   # per-shard contraction: print the static
+                cert = shard_slice_certificates(   # bounds certificates
+                    p, axis, frozenset(local))
+                extras.append(
+                    f"slice-certs[{p.dest}]: " + (", ".join(
+                        f"{a}={c}" for a, c in sorted(cert.items()))
+                        if cert else "none (dense grid)"))
+        return (f"{' + '.join(desc)} over {axis}"
+                + ("; " + "; ".join(extras) if extras else ""))
+
+    # ------------------- fused regions (pass 11, DESIGN.md §9) -----------
+    def _exec_fused(self, region, env, limits, array_limits,
+                    loop=None) -> bool:
+        """Run a FusedRound region as ONE jit+shard_map program: members
+        execute sequentially inside the traced body with their collectives
+        (psum / psum_scatter / all_gather) placed between them, instead of
+        one shard_map dispatch per member with a host hop in between.
+        With `loop`, the member sequence additionally runs under an
+        on-device lax.while_loop over the SeqLoop carry — zero host syncs
+        for the whole loop.  Returns False when a runtime guard fails
+        (member not round-classifiable, §5 packed value, condition not
+        computable from replicated state); the caller then falls back to
+        per-member rounds / the host-driven loop.  Fusion never changes
+        results, only dispatch."""
+        from .passes import _expr_names, _scalar_member
+        from .tiles import TiledMatrix
+        cp = self.cp
+        bail_key = id(region) if loop is None else id(loop)
+        if bail_key in self._fused_bail:
+            return False
+
+        def bail() -> bool:
+            self._fused_bail.add(bail_key)
+            return False
+
+        # ---- classify members against runtime shapes ----
+        units = []
+        for m in region.parts:
+            spec = self._round_spec(m, env) \
+                if (plan.is_reduce(m) or isinstance(m, _STORE_NODES)) \
+                else None
+            if spec is not None:
+                units.append(("round", m, spec))
+                continue
+            if not _scalar_member(m) or m.space.has_bag or any(
+                    jnp.shape(env[d]) != () for d in plan.dests_of(m)):
+                return bail()
+            units.append(("scalar", m, None))
+
+        # ---- name universe, entry representations ----
+        params = cp.program.params
+        all_names: set = set()
+        bagnames_all: set = set()
+        for _k, m, _s in units:
+            all_names |= set(m.reads) | set(plan.dests_of(m))
+            bagnames_all |= set(m.space.bag_names)
+        if loop is not None:
+            creads: set = set()
+            _expr_names(loop.cond, creads)
+            all_names |= {n for n in creads
+                          if n in params or n in cp.program.outputs}
+        dims = {n: env[n] for n in all_names
+                if n in params and params[n].kind == "dim"}
+        names = sorted(n for n in all_names if n not in dims)
+        if any(isinstance(env[n], TiledMatrix) for n in names):
+            return bail()                 # §5 reps cannot cross shard_map
+        reps = {}
+        for n in names:
+            if n in bagnames_all:
+                reps[n] = "bag"
+            elif self._placed_oned(n):
+                reps[n] = "block"
+            else:
+                reps[n] = "global"
+        entry_reps = dict(reps)
+        if loop is not None:
+            # cond evaluates per shard: every read must be replicated
+            for n in creads:
+                if n in dims:
+                    continue
+                if reps.get(n, "global") == "block":
+                    return bail()
+
+        # ---- static instruction plan (rep transitions, collectives) ----
+        instrs = []
+        exchanges_all = {}
+        for kind, m, spec in units:
+            if kind == "scalar":
+                reads = sorted(n for n in m.reads if n not in dims)
+                g = tuple(n for n in reads if reps.get(n) == "block")
+                instrs.append(("scalar", m, g))
+                for d in plan.dests_of(m):
+                    reps[d] = "global"
+                continue
+            parts, kinds = spec["parts"], spec["kinds"]
+            axis, rng = spec["axis"], spec["rng"]
+            member_dests = {p.dest for p in parts}
+            reads = sorted(set(m.reads) - member_dests - set(dims))
+            bagnames = tuple(m.space.bag_names)
+            local_eff = tuple(sorted(
+                n for n in spec["local"] if reps.get(n) == "block"))
+            gathered = tuple(sorted(
+                n for n in reads
+                if n not in bagnames and n not in local_eff
+                and reps.get(n) == "block"))
+            convs = []
+            exch = {}
+            doned = []
+            n_loc = (spec["axis_rows"] or self.dp_n) // self.dp_n
+            for p, k in zip(parts, kinds):
+                if k == "reduce":
+                    shp = jnp.shape(env[p.dest])
+                    d_rest = 1
+                    for d_ in shp[1:]:
+                        d_rest *= int(d_)
+                    oned = self._placed_oned(p.dest)
+                    exch[p.dest] = cp.selector.choose_exchange(
+                        k=int(shp[0]) if shp else 1, d=d_rest, op=p.op,
+                        nshards=self.dp_n, n_local=n_loc,
+                        dest_dist="ONED_ROW" if oned else "REP")
+                    need = "block" if oned else "global"
+                else:                     # store/aligned: dest is ONED
+                    oned = True
+                    need = "block"
+                doned.append(oned)
+                if reps.get(p.dest, "global") != need:
+                    convs.append((p.dest, need))
+                reps[p.dest] = need
+            exchanges_all.update(exch)
+            instrs.append(("round", m, parts, tuple(kinds), axis, rng,
+                           gathered, local_eff, tuple(convs),
+                           {d: x.backend for d, x in exch.items()},
+                           tuple(doned), bagnames))
+        endconvs = []
+        if loop is not None:
+            # while_loop carries need a stable representation: convert
+            # back to the entry rep at body end (normally a no-op)
+            for c in loop.carry:
+                if reps.get(c) != entry_reps.get(c):
+                    endconvs.append((c, entry_reps[c]))
+                    reps[c] = entry_reps[c]
+        dests_order = []
+        for _k, m, _s in units:
+            for d in plan.dests_of(m):
+                if d not in dests_order:
+                    dests_order.append(d)
+
+        # ---- operands, specs, cache key ----
+        node_lims = {b: limits[b] for b in sorted(bagnames_all)
+                     if b in limits}
+        arr_lims = {n: array_limits[n] for n in names if n in array_limits}
+        in_specs = []
+        args = []
+        shapes = {}
+        dtypes = {}
+        sig = []
+        for n in names:
+            v = env[n]
+            if entry_reps[n] == "bag":
+                in_specs.append(tuple(P(self.dp) for _ in v))
+                sig.append((n, "bag", tuple(
+                    (tuple(c.shape), str(c.dtype)) for c in v)))
+            else:
+                shapes[n] = tuple(jnp.shape(v))
+                dtypes[n] = jnp.asarray(v).dtype
+                sig.append((n, entry_reps[n], shapes[n], str(dtypes[n])))
+                in_specs.append(P(self.dp) if entry_reps[n] == "block"
+                                else P())
+            args.append(v)
+        out_specs = tuple(P(self.dp) if reps[d] == "block" else P()
+                          for d in dests_order)
+        cache_key = ("fused", bail_key, tuple(sig),
+                     tuple((i[0], id(i[1]), i[2] if i[0] == "scalar" else
+                            (i[3], i[4], i[5], i[6], i[7], i[8],
+                             tuple(sorted(i[9].items())), i[10], i[11]))
+                           for i in instrs),
+                     tuple(endconvs), tuple(sorted(node_lims.items())),
+                     tuple(sorted(arr_lims.items())),
+                     tuple(sorted(dims.items())),
+                     tuple(sorted(self._demoted)))
+        fn = self._round_cache.get(cache_key)
+        if fn is not None:
+            self._round_hits += 1
+            results = fn(*args)
+            self._strategy.update(self._strategy_by_key[cache_key])
+            self._decisions.update(self._round_notes[cache_key])
+            for d, res in zip(dests_order, results):
+                env[d] = res
+            return True
+
+        # trace-time: record the region + per-member strategies
+        strat = {}
+        n_members = len(units)
+        head = f"fused round: {n_members} member" + \
+            ("s" if n_members != 1 else "") + ", 1 shard_map program"
+        if loop is not None:
+            head += "; on-device lax.while_loop (0 host syncs)"
+            strat[id(loop)] = ("on-device lax.while_loop inside ONE fused "
+                               "shard_map round (0 host syncs)")
+        strat[id(region)] = head
+        for instr in instrs:
+            if instr[0] == "scalar":
+                strat[id(instr[1])] = "replicated scalar (inside fused round)"
+                continue
+            (_t, m, parts, kinds, axis, _rng, gathered, local_eff,
+             _convs, exch_b, doned, _bags) = instr
+            strat[id(m)] = self._round_desc(
+                parts, kinds, axis, exchanges_all,
+                {p.dest: o for p, o in zip(parts, doned)},
+                gathered, local_eff)
+        self._strategy.update(strat)
+
+        dp, dp_n = self.dp, self.dp_n
+        mesh_shape = {a: self.mesh.shape[a] for a in dp}
+        carry_names = loop.carry if loop is not None else ()
+        cond_expr = loop.cond if loop is not None else None
+        dshapes = {d: tuple(jnp.shape(env[d])) for d in dests_order}
+        ddtypes = {d: jnp.asarray(env[d]).dtype for d in dests_order}
+
+        def local_fn(*vals):
+            e2 = dict(zip(names, vals))
+            e2.update(dims)
+            shard = 0
+            for a in dp:
+                shard = shard * mesh_shape[a] + jax.lax.axis_index(a)
+
+            def to_global(v):
+                return jax.lax.all_gather(v, dp, axis=0, tiled=True)
+
+            def to_block(v, nme):
+                blk = (shapes.get(nme) or dshapes[nme])[0] // dp_n
+                return jax.lax.dynamic_slice_in_dim(v, shard * blk, blk,
+                                                    axis=0)
+
+            def convert(e, nme, need):
+                e[nme] = to_block(e[nme], nme) if need == "block" \
+                    else to_global(e[nme])
+
+            def run_body(e2):
+                for instr in instrs:
+                    if instr[0] == "scalar":
+                        _t, m, g = instr
+                        eu = dict(e2)
+                        for n in g:
+                            eu[n] = to_global(eu[n])
+                        ctx = ExecContext({}, node_lims, {}, arr_lims, {},
+                                          frozenset())
+                        e2[m.dest] = cp.executor.run_node(m, eu, ctx)
+                        continue
+                    (_t, m, parts, kinds, axis, rng, gathered, local_eff,
+                     convs, exch, doned, bagnames) = instr
+                    for d, need in convs:
+                        convert(e2, d, need)
+                    eu = dict(e2)
+                    for n in gathered:
+                        eu[n] = to_global(eu[n])
+                    offs = {b: shard * eu[b][0].shape[0] for b in bagnames}
+                    row_offs = {n: shard * eu[n].shape[0]
+                                for n in local_eff}
+                    axis_ov = {}
+                    if rng is not None:
+                        blk, lim, total = rng
+                        axis_ov[axis] = (shard * blk, blk, lim, total)
+                    for p, k, oned in zip(parts, kinds, doned):
+                        shp, dt = dshapes[p.dest], ddtypes[p.dest]
+                        ro = dict(row_offs)
+                        cert = set(local_eff)
+                        if k == "store":
+                            eu[p.dest] = e2[p.dest]
+                            ro[p.dest] = shard * eu[p.dest].shape[0]
+                            cert.add(p.dest)
+                            ctx = ExecContext(offs, node_lims, ro, arr_lims,
+                                              axis_ov, frozenset(cert))
+                            e2[p.dest] = cp.executor.run_node(p, eu, ctx)
+                        elif k == "aligned":
+                            prev = e2[p.dest]
+                            blk0 = shp[0] // dp_n
+                            eu[p.dest] = jnp.full(
+                                (blk0,) + tuple(shp[1:]), identity(p.op, dt))
+                            ro[p.dest] = shard * blk0
+                            cert.add(p.dest)
+                            ctx = ExecContext(offs, node_lims, ro, arr_lims,
+                                              axis_ov, frozenset(cert))
+                            res = cp.executor.run_node(p, eu, ctx)
+                            e2[p.dest] = COMBINE[p.op](prev, res)
+                        else:             # unaligned reduce
+                            prev = jnp.asarray(e2[p.dest])
+                            eu[p.dest] = jnp.full(shp, identity(p.op, dt))
+                            ctx = ExecContext(offs, node_lims, ro, arr_lims,
+                                              axis_ov, frozenset(cert))
+                            part_res = cp.executor.run_node(p, eu, ctx)
+                            exchd = self._combine_shard(
+                                part_res, p.op, shard, oned,
+                                exch.get(p.dest, "psum_scatter"))
+                            e2[p.dest] = COMBINE[p.op](prev, exchd)
+                return e2
+
+            if cond_expr is None:
+                e2 = run_body(e2)
+                return tuple(e2[d] for d in dests_order)
+
+            def cond_fn(c):
+                ec = dict(e2)
+                ec.update(dict(zip(carry_names, c)))
+                return jnp.asarray(cp.executor.eval_scalar(cond_expr, ec),
+                                   bool)
+
+            def body_fn(c):
+                eb = dict(e2)
+                eb.update(dict(zip(carry_names, c)))
+                eb = run_body(eb)
+                for nme, need in endconvs:
+                    convert(eb, nme, need)
+                return tuple(jnp.asarray(eb[n]) for n in carry_names)
+
+            carry0 = tuple(jnp.asarray(e2[n]) for n in carry_names)
+            out = jax.lax.while_loop(cond_fn, body_fn, carry0)
+            e2.update(dict(zip(carry_names, out)))
+            return tuple(e2[d] for d in dests_order)
+
+        fn = jax.jit(shard_map(local_fn, mesh=self.mesh,
+                               in_specs=tuple(in_specs),
+                               out_specs=out_specs, check_rep=False))
+        try:
+            results = fn(*args)           # traces: executor notes decisions
+        except Exception:
+            # a member materialization the fused ctx cannot express —
+            # guaranteed fallback to per-member rounds, results unchanged
+            for k in strat:
+                self._strategy.pop(k, None)
+            return bail()
+        self._round_cache[cache_key] = fn
+        self._round_traces += 1
+        notes = {}
+        for _k, m, _s in units:
+            notes.update(self._part_notes(m))
+        self._round_notes[cache_key] = notes
+        self._decisions.update(notes)
+        self._strategy_by_key[cache_key] = strat
+        for d, res in zip(dests_order, results):
+            env[d] = res
+        return True
 
     def _part_notes(self, node) -> dict:
         """Snapshot the executor's materialization decisions for the
@@ -548,6 +958,8 @@ class DistributedProgram:
         depends on runtime row counts, so call after run()."""
         out = [f"== distributed rounds: {self.cp.program.name} "
                f"({self.dp_n} shards over {self.dp}, mode={self.mode}) =="]
+        out.append(f"round cache: {self._round_traces} traced, "
+                   f"{self._round_hits} hits")
         if self._demoted:
             out.append("placement: " + ", ".join(
                 f"{n}→REP (dest-{d.backend}[{d.source}])"
@@ -560,7 +972,17 @@ class DistributedProgram:
         for node in nodes:
             if isinstance(node, plan.SeqLoop):
                 out.append(f"{pre}{node.describe()}")
+                strat = self._strategy.get(id(node))
+                if strat is not None:
+                    out.append(f"{pre}    loop: {strat}")
                 self._round_lines(node.body, indent + 1, out)
+                continue
+            if isinstance(node, plan.FusedRound):
+                out.append(f"{pre}{node.describe()}")
+                strat = self._strategy.get(id(node))
+                if strat is not None:
+                    out.append(f"{pre}    round: {strat}")
+                self._round_lines(node.parts, indent + 1, out)
                 continue
             out.append(f"{pre}{node.describe()}")
             strat = self._strategy.get(id(node))
@@ -575,6 +997,7 @@ class DistributedProgram:
     # ------------------------- entry -------------------------
     def run(self, inputs: dict) -> dict:
         env = {}
+        self._fused_bail = set()     # placements/shapes are per-run
         placed, limits, array_limits = self.place(inputs)
         for name, t in self.cp.program.params.items():
             v = placed[name]

@@ -306,7 +306,7 @@ class PlanExecutor:
                     for i in e.idxs]
             off = ctx.row_offsets.get(e.array)
             lim = ctx.array_limits.get(e.array)
-            clipped = []
+            cooked = []
             for dim_i, (d, ix) in enumerate(zip(arr.shape, idxs)):
                 ix = jnp.asarray(ix, jnp.int32)
                 if dim_i == 0:
@@ -314,11 +314,23 @@ class PlanExecutor:
                         masks.append(ix < lim)
                     if off is not None:     # localize to the shard's block
                         ix = ix - off
-                masks.append((ix >= 0) & (ix < d))
-                clipped.append(jnp.clip(ix, 0, d - 1))
-            if len(clipped) == 1:
-                return jnp.take(arr, clipped[0], axis=0)
-            return arr[tuple(jnp.broadcast_arrays(*clipped))]
+                # uint32 reinterpretation: negatives wrap past any dim, so
+                # ONE unsigned compare is the whole inRange check
+                # ((ix >= 0) & (ix < d)) and the gather indexes unsigned
+                iu = ix.astype(jnp.uint32)
+                masks.append(iu < jnp.uint32(d))
+                cooked.append(iu)
+            # clip-mode gather on the unsigned indices: out-of-range rows
+            # read a clamped row, and §3.4 empty-bag semantics live in the
+            # recorded inRange MASK, which every consumer applies — the
+            # gathered value at a dropped row is never observable.  Clamp
+            # is one fusable op; a fill-mode gather would add a
+            # compare+select pair per gather, measured ~20% slower on the
+            # scatter-fed group-by path (pagerank's inner loop).
+            if len(cooked) == 1:
+                return jnp.take(arr, cooked[0], axis=0, mode="clip")
+            return arr.at[tuple(jnp.broadcast_arrays(*cooked))].get(
+                mode="clip")
         if isinstance(e, BinOp):
             return OPS[e.op](self.eval(e.lhs, env, ax, binding, masks, ctx),
                              self.eval(e.rhs, env, ax, binding, masks, ctx))
@@ -334,10 +346,14 @@ class PlanExecutor:
               ctx: ExecContext = _EMPTY_CTX):
         for c in conds:
             masks.append(self.eval(c, env, ax, binding, masks, ctx))
-        if not masks:
+        uniq: list = []                  # repeated reads of one array CSE
+        for x in masks:                  # to one traced mask: AND it once
+            if not any(x is u for u in uniq):
+                uniq.append(x)
+        if not uniq:
             return None
-        m = masks[0]
-        for x in masks[1:]:
+        m = uniq[0]
+        for x in uniq[1:]:
             m = jnp.logical_and(m, x)
         return jnp.broadcast_to(m, ax.shape()) if ax.order else m
 
@@ -350,6 +366,10 @@ class PlanExecutor:
         for node in nodes:
             if isinstance(node, P.SeqLoop):
                 self._exec_seq_loop(node, env, ctx)
+            elif isinstance(node, P.FusedRound):
+                # round-fusion region: plain sequencing on a single device
+                # (the grouping only matters to the distributed executor)
+                self.execute(node.parts, env, ctx)
             elif isinstance(node, P.Fused):
                 for part, v in zip(node.parts, self.run_node(node, env, ctx)):
                     env[part.dest] = v
@@ -516,14 +536,18 @@ class PlanExecutor:
             for k in node.keys]
         dest_off = ctx.row_offsets.get(node.dest)
         dest_lim = ctx.array_limits.get(node.dest)
-        ok = jnp.ones(shape, bool) if m is None else m
+        ok = None if m is None else m
         if dest_lim is not None:          # logical bound, global coords
-            ok &= kk[0] < dest_lim
+            lim_ok = kk[0] < dest_lim
+            ok = lim_ok if ok is None else ok & lim_ok
         if dest_off is not None:          # localize to the shard block
             kk[0] = kk[0] - dest_off
-        for k, d in zip(kk, dest.shape):
-            ok &= (k >= 0) & (k < d)
-        kk = [jnp.where(ok, k, d) for k, d in zip(kk, dest.shape)]
+        if ok is not None:                # condition/pad drops: sentinel
+            kk[0] = jnp.where(ok, kk[0], dest.shape[0])
+        # uint32 reinterpretation: negative/OOB keys wrap past the dims
+        # and drop natively — no per-dim bounds selects, no signed-index
+        # normalization (see _exec_segment)
+        kk = [k.astype(jnp.uint32) for k in kk]
         return dest.at[tuple(kk)].set(val.astype(dest.dtype), mode="drop")
 
     # ---- reductions ----
@@ -580,22 +604,23 @@ class PlanExecutor:
                 dest, seg.reshape(dest.shape).astype(dest.dtype))
         # native scatter-⊕ straight into the destination with drop
         # semantics — no identity-filled segment array, no index
-        # flattening.  The scatter's own UPPER bounds check is the
-        # paper's §3.4 OOB-write-drops semantics; negative keys need an
-        # explicit sentinel (jax normalizes them to end-relative indices
-        # BEFORE the mode="drop" check), as do the logical dim-0 bound
-        # (padded rows) and condition masks.
-        drop = None
-        for k in kk:
-            neg = k < 0
-            drop = neg if drop is None else (drop | neg)
-        if lim0 is not None:
-            drop = drop | (kk[0] >= lim0)
+        # flattening.  Keys are reinterpreted as uint32: a negative key
+        # wraps to ≥ 2^31, far beyond any dimension, so the scatter's own
+        # mode="drop" bounds check drops it natively — the paper's §3.4
+        # OOB-write-drops semantics with NO sentinel select, and XLA
+        # skips the signed-index normalization chain entirely (2 selects
+        # + 2 compares per scatter on the hot group-by path).  Rows
+        # dropped for other reasons — a failed condition, an out-of-range
+        # value gather, a padded row — scatter the ⊕ IDENTITY instead:
+        # contributing the identity is contributing nothing (and it also
+        # scrubs the non-finite values a dropped row may carry).
+        val = val.astype(dest.dtype)
         if m is not None:
-            drop = drop | jnp.logical_not(m)
-        kk[0] = jnp.where(drop, dest.shape[0], kk[0])
-        return _scatter_op(dest.at[tuple(kk)], node.op)(
-            val.astype(dest.dtype), mode="drop")
+            val = jnp.where(m, val, identity(node.op, dest.dtype))
+        if lim0 is not None:      # logical dim-0 bound (padded rows)
+            kk[0] = jnp.where(kk[0] >= lim0, dest.shape[0], kk[0])
+        kk = [k.astype(jnp.uint32) for k in kk]
+        return _scatter_op(dest.at[tuple(kk)], node.op)(val, mode="drop")
 
     def _segment_flat(self, backend: str, ids, vals, num: int, op: str):
         """[N]-flat segment-⊕ partial via the chosen backend.  `ids` ==
@@ -1018,7 +1043,8 @@ class CompiledProgram:
     def __init__(self, prog: Program, target, optimize_contractions=True,
                  use_kernels=False, infer_distributions=True,
                  dense_fastpath=True, op_select="cost",
-                 autotune_cache=None):
+                 autotune_cache=None, compile_mode="whole",
+                 donate=False, round_fusion=True):
         self.program = prog
         self.target = target
         from .op_select import CACHE_FILE, OpSelector
@@ -1029,12 +1055,33 @@ class CompiledProgram:
                                  infer_distributions=infer_distributions,
                                  dense_fastpath=dense_fastpath,
                                  op_select=op_select,
-                                 autotune_cache=autotune_cache)
+                                 autotune_cache=autotune_cache,
+                                 round_fusion=round_fusion)
         self.plan = plan_program(target, prog, self.config)
         from .dist_analysis import collect
         self.dists = collect(self.plan)   # array → Dist (pass-8 annotations)
         self.selector = OpSelector(op_select, cache_path=autotune_cache)
         self.executor = PlanExecutor(prog, self.selector)
+        # ---- whole-program compilation (DESIGN.md §9) ----
+        # run() traces the ENTIRE plan into one cached jax.jit computation
+        # per (static dims, shapes, dtypes) signature — one XLA dispatch
+        # per call instead of one per node.  compile_mode="eager" keeps the
+        # per-node path (the guaranteed fallback, also taken automatically
+        # when a trace fails or an input arrives §5-packed).  `donate`
+        # additionally donates the buffers of mutated destinations and
+        # SeqLoop carries to the computation — callers passing jax arrays
+        # must not reuse them after the call (numpy inputs are copied to
+        # device per call, so donation is always safe for them).
+        self.compile_mode = compile_mode
+        self.donate = donate
+        self._whole_cache: dict = {}   # signature → (fn, decisions snapshot)
+        self._whole_disabled = False
+        self.trace_count = 0           # whole-program traces (test probe)
+        self.cache_hits = 0
+        self._donate_names = frozenset(
+            d for n in self.plan for d in P.dests_of(n)
+            if prog.params.get(d) is not None
+            and prog.params[d].kind != "dim")
 
     def pretty_target(self) -> str:
         return "\n".join(pretty(s) for s in self.target)
@@ -1044,9 +1091,17 @@ class CompiledProgram:
         statement.  `tiled` names params assumed to arrive §5-packed.
         After a run(), nodes whose backend the operator-selection
         subsystem resolved at trace time carry a `selected:` line (e.g.
-        ``selected: segment:scatter[cost]``)."""
-        return P.explain(self.plan, self.program.name, tiled,
+        ``selected: segment:scatter[cost]``).  The trailing
+        `whole-program:` line reports the compile-cache state — how many
+        signatures were traced and how many run() calls hit the cache."""
+        text = P.explain(self.plan, self.program.name, tiled,
                          decisions=self.executor.decisions)
+        mode = "eager" if self.compile_mode != "whole" or \
+            self._whole_disabled else "whole"
+        text += (f"\nwhole-program: mode={mode}, {self.trace_count} traced, "
+                 f"{self.cache_hits} cache hits"
+                 + (", donate=on" if self.donate else ""))
+        return text
 
     # -- public execution interface (distributed.py consumes this) --
     def execute(self, env: dict, *, bag_offsets=None, bag_limits=None,
@@ -1075,7 +1130,76 @@ class CompiledProgram:
                 env[name] = jnp.asarray(v)
         return env
 
+    # ---- whole-program path ----
+    def _signature(self, env):
+        """Compile-cache key: static dims by VALUE (they define shapes),
+        arrays by shape+dtype.  None = this env cannot take the whole-
+        program path (§5 packed inputs execute eagerly)."""
+        from .tiles import TiledMatrix
+        sig = []
+        for name, t in self.program.params.items():
+            v = env[name]
+            if t.kind == "dim":
+                sig.append((name, "dim", v))
+            elif t.kind == "bag":
+                sig.append((name, "bag", tuple(
+                    (tuple(c.shape), str(c.dtype)) for c in v)))
+            elif isinstance(v, TiledMatrix):
+                return None
+            else:
+                sig.append((name, t.kind, tuple(jnp.shape(v)),
+                            str(jnp.asarray(v).dtype)))
+        return tuple(sig)
+
+    def _run_whole(self, inputs: dict):
+        env = self.prepare_env(inputs)
+        sig = self._signature(env)
+        if sig is None:
+            return None                       # packed inputs: eager path
+        static = {n: v for n, v in env.items() if isinstance(v, int)}
+        # donation only applies at a real jit boundary: under an outer
+        # trace (callers wrapping run() in their own jit) the donated
+        # buffers are tracers and jax would warn and ignore them
+        donate = self.donate and not any(
+            isinstance(x, jax.core.Tracer)
+            for v in env.values()
+            for x in (v if isinstance(v, tuple) else (v,)))
+        donated = {n: v for n, v in env.items()
+                   if donate and n in self._donate_names
+                   and not isinstance(v, int)}
+        kept = {n: v for n, v in env.items()
+                if n not in static and n not in donated}
+        key = (sig, donate)
+        ent = self._whole_cache.get(key)
+        if ent is None:
+            def traced(dnt, kpt, _static=dict(static)):
+                e = dict(_static)
+                e.update(dnt)
+                e.update(kpt)
+                self.executor.execute(self.plan, e)
+                return {n: e[n] for n in self.program.outputs}
+
+            fn = jax.jit(traced, donate_argnums=(0,) if donated else ())
+            try:
+                out = fn(donated, kept)       # traces the whole plan once
+            except Exception:
+                self._whole_disabled = True   # guaranteed eager fallback
+                return None
+            self.trace_count += 1
+            self._whole_cache[key] = (fn, dict(self.executor.decisions))
+            return out
+        fn, notes = ent
+        self.cache_hits += 1
+        # cached signatures skip the trace: restore the decision snapshot
+        # taken when this signature was traced, so explain() stays accurate
+        self.executor.decisions.update(notes)
+        return fn(donated, kept)
+
     def run(self, inputs: dict) -> dict:
+        if self.compile_mode == "whole" and not self._whole_disabled:
+            out = self._run_whole(inputs)
+            if out is not None:
+                return out
         env = self.prepare_env(inputs)
         self.execute(env)
         return {n: env[n] for n in self.program.outputs}
@@ -1090,7 +1214,10 @@ def compile_program(fn_or_prog, *, restrictions=True,
                     infer_distributions=True,
                     dense_fastpath=True,
                     op_select="cost",
-                    autotune_cache=None) -> CompiledProgram:
+                    autotune_cache=None,
+                    compile_mode="whole",
+                    donate=False,
+                    round_fusion=True) -> CompiledProgram:
     """Front door: loop program → restrictions check (Def. 3.1) →
     comprehension translation (Fig. 2) → pass pipeline (passes.py) →
     executable physical plan.
@@ -1107,7 +1234,17 @@ def compile_program(fn_or_prog, *, restrictions=True,
     to REP (replicated — the pre-analysis distributed behaviour);
     dense_fastpath=False disables the executor specialization pass
     (DenseMap / MXU AxisReduce / columnar certificates) — operators then
-    always materialize the general way."""
+    always materialize the general way.
+
+    compile_mode picks the execution strategy of run() (DESIGN.md §9):
+    "whole" (default) traces the entire plan into ONE cached XLA
+    computation per (dims, shapes, dtypes) signature; "eager" keeps the
+    per-node dispatch path (also the automatic fallback when a whole-
+    program trace fails or inputs arrive §5-packed).  donate=True
+    additionally donates mutated destinations and SeqLoop carries at the
+    jit boundary — callers must then treat jax-array inputs as consumed.
+    round_fusion=False disables pass 11 (FusedRound regions / on-device
+    distributed loops)."""
     prog = fn_or_prog if isinstance(fn_or_prog, Program) \
         else fn_or_prog.program
     if restrictions:
@@ -1115,4 +1252,5 @@ def compile_program(fn_or_prog, *, restrictions=True,
     target = translate(prog)
     return CompiledProgram(prog, target, optimize_contractions, use_kernels,
                            infer_distributions, dense_fastpath, op_select,
-                           autotune_cache)
+                           autotune_cache, compile_mode, donate,
+                           round_fusion)

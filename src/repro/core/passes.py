@@ -44,17 +44,25 @@ contract (see DESIGN.md):
                                 resolved at trace time by the cost-model /
                                 autotune selector (op_select.py, DESIGN.md
                                 §8); annotation-only
+ 11. round-fusion               adjacent shard-mappable nodes → FusedRound
+                                regions (one shard_map program per region,
+                                collectives inside; a fully-fusable SeqLoop
+                                body becomes the on-device-loop candidate);
+                                sequencing-only — the single-device
+                                executor runs members unchanged (DESIGN.md
+                                §9)
 
 Passes 2-6 must run in this order: classification consumes rewritten reads,
 dense-fastpath recognizes products on AxisReduce nodes from 3, einsum
 promotes that recognition to EinsumContract nodes, tiled-fusion consumes
 EinsumContract nodes.  Passes 7-8 are cleanups over the final operator
 choice and must run last among the transforms (fusion would otherwise hide
-stores from the deadness scan).  Passes 9-10 transform nothing — they must
+stores from the deadness scan).  Passes 9-11 transform nothing — they must
 see the FINAL operator choices (a Fused round places all its parts, an
 eliminated store constrains nothing), so they run after everything else;
 10 follows 9 because a backend's shape class includes the destination's
-inferred sharding.
+inferred sharding, and 11 follows both because a region groups nodes whose
+round classification (placements included) is already final.
 """
 from __future__ import annotations
 
@@ -76,6 +84,7 @@ class PlanConfig:
     dense_fastpath: bool = True          # False = no executor specialization
     op_select: str = "cost"              # "cost" | "autotune" | "force:<b>"
     autotune_cache: str = ".repro_autotune.json"   # on-disk decision cache
+    round_fusion: bool = True            # False = one shard_map per node
 
 
 # ---------------------------------------------------------------------------
@@ -708,6 +717,99 @@ def pass_select_backend(nodes: list, prog, config) -> list:
 
 
 # ---------------------------------------------------------------------------
+# pass 11: round fusion (distributed dispatch; see plan.FusedRound)
+# ---------------------------------------------------------------------------
+
+def _scalar_member(n) -> bool:
+    """Nodes the distributed executor can run replicated inside a fused
+    shard_map region: scalar assignments and scalar ⊕-aggregations (their
+    reads are scalars / replicated values; bag-driven ScalarReduce instead
+    classifies as an unaligned reduce with a psum exchange)."""
+    if isinstance(n, P.ScalarReduce):
+        return True
+    return type(n) in (P.MapExpr, P.DenseMap) and n.key_axes is None
+
+
+def _fusable_member(n) -> bool:
+    """Static half of the fused-round compatibility check: can this node in
+    principle run as one sub-round of a single shard_map program?  The
+    runtime half (row counts, placements, TiledMatrix representations) is
+    re-checked at round-build time in distributed.py; a failure there falls
+    back to per-member rounds, never to an error."""
+    from .dist_analysis import leading_key_var, round_axis
+    if isinstance(n, P.SeqLoop):
+        return False                     # loops fuse their own bodies
+    if _scalar_member(n):
+        return True
+    if isinstance(n, P.Fused):
+        return all(_fusable_member(p) for p in n.parts)
+    if isinstance(n, (P.MapExpr, P.Scatter)):
+        ax = round_axis(n)
+        return ax is not None and leading_key_var(n) == ax
+    if isinstance(n, P.SegmentReduce):
+        return n.space.has_bag           # range-driven: no psum source
+    if isinstance(n, (P.AxisReduce, P.EinsumContract, P.TiledMatmul)):
+        return n.space.has_bag or round_axis(n) is not None
+    return False
+
+
+def pass_fuse_rounds(nodes: list, prog, config) -> list:
+    """Group adjacent shard-mappable nodes into `FusedRound` regions so the
+    distributed executor dispatches ONE shard_map program per region, with
+    the collectives inside it.  A SeqLoop whose entire body is fusable gets
+    its body wrapped in a single region — the precondition for running the
+    loop as an on-device lax.while_loop (no per-iteration host sync).
+    Annotation-level sequencing only: every member keeps its own operator,
+    classification and candidate set, and the single-device executor runs
+    the members exactly as if they were never grouped."""
+    if not config.round_fusion:
+        return nodes
+
+    def region(group):
+        reads: set = set()
+        dests: set = set()
+        for g in group:
+            reads |= set(g.reads)
+            dests.update(P.dests_of(g))
+        return P.FusedRound(None, P.IterSpace(()),
+                            frozenset(reads - dests), parts=group)
+
+    def block(b):
+        out: list = []
+        group: list = []
+
+        def flush():
+            if len(group) >= 2:
+                out.append(region(list(group)))
+            else:
+                out.extend(group)
+            group.clear()
+
+        for n in b:
+            if _fusable_member(n):
+                group.append(n)
+            else:
+                flush()
+                out.append(n)
+        flush()
+        return out
+
+    def fix_loops(ns):
+        for n in ns:
+            if isinstance(n, P.SeqLoop):
+                fix_loops(n.body)
+                if n.body and all(_fusable_member(x) for x in n.body):
+                    # whole body in ONE region (even a single member): the
+                    # on-device loop needs one shard_map program per body
+                    n.body = [region(list(n.body))]
+                else:
+                    n.body = block(n.body)
+        return ns
+
+    return block(fix_loops(nodes))
+
+
+# ---------------------------------------------------------------------------
 # the pipeline
 # ---------------------------------------------------------------------------
 
@@ -721,6 +823,7 @@ PIPELINE = (
     ("update-fusion", pass_fuse_updates),
     ("distribution-analysis", pass_distribution),
     ("operator-selection", pass_select_backend),
+    ("round-fusion", pass_fuse_rounds),
 )
 
 

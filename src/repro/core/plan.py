@@ -362,6 +362,33 @@ class Fused:
         return f"Fused[{self.space.pretty()}] {{{len(self.parts)} updates}}"
 
 
+@dataclass
+class FusedRound:
+    """Round-fusion region (pass 11, round-fusion): adjacent plan nodes the
+    distributed executor may run as ONE shard_map program, with the
+    collectives (psum / psum_scatter / all_gather) placed INSIDE the fused
+    body instead of one jit+shard_map dispatch per node.  Unlike `Fused`
+    (one iteration space, disjoint destinations, parallel parts) the
+    members here execute SEQUENTIALLY — later members see earlier results —
+    and each member keeps its own round classification (aligned store /
+    aligned reduce / unaligned reduce / replicated scalar).  A SeqLoop
+    whose whole body is one region additionally runs as an ON-DEVICE
+    lax.while_loop inside the same shard_map program when its condition is
+    computable from the carry, eliminating the per-iteration host sync.
+
+    The single-device executor treats the region as plain sequencing; the
+    distributed executor verifies member compatibility against runtime
+    shapes at round-build time and falls back to per-member rounds when a
+    guard fails.  Grouping never changes results, only dispatch."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    parts: list = field(default_factory=list)
+
+    def describe(self) -> str:
+        return f"FusedRound{{{len(self.parts)} members}}"
+
+
 PlanNode = Any
 
 REDUCE_NODES = (SegmentReduce, AxisReduce, EinsumContract, TiledMatmul,
@@ -371,9 +398,28 @@ REDUCE_NODES = (SegmentReduce, AxisReduce, EinsumContract, TiledMatmul,
 def dests_of(node: PlanNode) -> tuple[str, ...]:
     if isinstance(node, Fused):
         return tuple(p.dest for p in node.parts)
+    if isinstance(node, FusedRound):
+        out: list = []
+        for p in node.parts:
+            for d in dests_of(p):
+                if d not in out:
+                    out.append(d)
+        return tuple(out)
     if isinstance(node, SeqLoop):
         return node.carry
     return (node.dest,)
+
+
+def flatten(nodes) -> list:
+    """Top-level nodes with FusedRound regions opened (members in order).
+    SeqLoop and Fused are NOT opened — they are operators, not regions."""
+    out: list = []
+    for n in nodes:
+        if isinstance(n, FusedRound):
+            out.extend(flatten(n.parts))
+        else:
+            out.append(n)
+    return out
 
 
 def is_reduce(node: PlanNode) -> bool:
@@ -394,7 +440,7 @@ def _node_lines(node: PlanNode, indent: int, tiled, out: list,
         for b in node.body:
             _node_lines(b, indent + 1, tiled, out, decisions)
         return
-    if isinstance(node, Fused):
+    if isinstance(node, (Fused, FusedRound)):
         out.append(f"{pre}{node.describe()}")
         for p in node.parts:
             _node_lines(p, indent + 1, tiled, out, decisions)

@@ -6,7 +6,7 @@ import numpy as np
 from repro.core import compile_program, interpret, loop_program
 from repro.core import matrix, vector, dim
 from repro.core.plan import (AxisReduce, EinsumContract, Fused, MapExpr,
-                             SegmentReduce, TiledMatmul)
+                             SegmentReduce, TiledMatmul, flatten)
 from repro.core.programs import ALL
 
 
@@ -17,7 +17,7 @@ def test_matmul_explains_einsum():
     assert "[fallback: AxisReduce(+ over k)" in text
     # matmul-shaped contractions carry the §5 wrapper; dense lhs at runtime
     # resolves to the EinsumContract underneath
-    node = cp.plan[1]
+    node = flatten(cp.plan)[1]          # [zero-init; contract] region
     assert isinstance(node, TiledMatmul)
     assert isinstance(node.contract, EinsumContract)
 
@@ -63,7 +63,7 @@ def test_tiled_matmul_explains_fused_kernel():
     text = cp.explain(tiled={"M"})
     assert "TiledMatmul" in text           # §5 fusion: packed lhs, no unpack
     assert "unpack" not in text.lower()
-    node = cp.plan[1]
+    node = flatten(cp.plan)[1]
     assert isinstance(node, TiledMatmul) and node.lhs == "M"
     # without the packed-input hint the same plan resolves to the einsum
     assert "TiledMatmul" not in compile_program(
@@ -78,7 +78,7 @@ def test_dead_store_eliminated():
             W[i] = float(i) * 2.0
 
     cp = compile_program(reinit)
-    stores = [x for x in cp.plan if isinstance(x, MapExpr)]
+    stores = [x for x in flatten(cp.plan) if isinstance(x, MapExpr)]
     assert len(stores) == 1                # the zero-store is dead
     v = np.arange(5, dtype=np.float64)
     ins = dict(V=v, W=np.full(5, 7.0), n=5)
@@ -97,7 +97,7 @@ def test_gather_killer_does_not_eliminate():
             W[i] = A[int(V[i])] + 10.0
 
     cp = compile_program(indirect)
-    stores = [x for x in cp.plan if isinstance(x, MapExpr)]
+    stores = [x for x in flatten(cp.plan) if isinstance(x, MapExpr)]
     assert len(stores) == 2                # both survive
     v = np.array([0.0, 1.0, 9.0, 2.0])     # row 2 gathers out of range
     a = np.array([0.0, 1.0, 2.0, 3.0])
@@ -112,12 +112,12 @@ def test_gather_killer_does_not_eliminate():
 def test_zero_init_before_update_not_eliminated():
     # matmul's R := 0 feeds the ⊕-update that follows: must survive DSE
     cp = compile_program(ALL["matrix_multiplication"])
-    assert isinstance(cp.plan[0], MapExpr)
+    assert isinstance(flatten(cp.plan)[0], MapExpr)
 
 
 def test_update_fusion_shares_iteration_space():
     cp = compile_program(ALL["linear_regression"])
-    fused = [x for x in cp.plan if isinstance(x, Fused)]
+    fused = [x for x in flatten(cp.plan) if isinstance(x, Fused)]
     assert len(fused) == 2                 # (sum_x,sum_y) and (xx_bar,xy_bar)
     assert all(len(f.parts) == 2 for f in fused)
 
@@ -125,9 +125,9 @@ def test_update_fusion_shares_iteration_space():
 def test_fusion_respects_dependences():
     # kmeans: Cl reads MinD, so their AxisReduces must NOT fuse
     cp = compile_program(ALL["kmeans_step"])
-    ar = [x for x in cp.plan if isinstance(x, AxisReduce)]
+    ar = [x for x in flatten(cp.plan) if isinstance(x, AxisReduce)]
     assert len(ar) == 2                    # MinD and Cl, separate nodes
-    fused = [x for x in cp.plan if isinstance(x, Fused)]
+    fused = [x for x in flatten(cp.plan) if isinstance(x, Fused)]
     assert len(fused) == 1                 # only SX/SY/CN fuse
     assert {p.dest for p in fused[0].parts} == {"SX", "SY", "CN"}
     assert all(isinstance(p, SegmentReduce) for p in fused[0].parts)

@@ -1,0 +1,234 @@
+"""Round fusion (pass 11, DESIGN.md §9): adjacent shard-mappable nodes
+group into FusedRound regions, a fully-fusable SeqLoop body becomes ONE
+shard_map program with the collectives inside it and the loop running as an
+on-device lax.while_loop (zero per-iteration host syncs) — golden-tested
+via explain_rounds().  Distributed execution must equal single-device in
+all of: fused rounds, the per-member fallback, the replicated-body
+on-device loop, and with round fusion disabled.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import compile_program
+from repro.core.plan import FusedRound, SeqLoop, flatten
+from repro.core.programs import ALL
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# fast: plan-structure goldens
+# ---------------------------------------------------------------------------
+
+def test_seq_loop_body_becomes_one_region():
+    cp = compile_program(ALL["pagerank"])
+    loop = next(n for n in cp.plan if isinstance(n, SeqLoop))
+    assert len(loop.body) == 1 and isinstance(loop.body[0], FusedRound)
+    assert len(loop.body[0].parts) == 4   # steps, NP:=0, NP⊕, P:=
+    assert "FusedRound{4 members}" in cp.explain()
+
+
+def test_top_level_adjacent_rounds_group():
+    cp = compile_program(ALL["kmeans_step"])
+    assert len(cp.plan) == 1 and isinstance(cp.plan[0], FusedRound)
+    # flattening recovers the ungrouped member order
+    assert len(flatten(cp.plan)) == len(cp.plan[0].parts)
+
+
+def test_round_fusion_off_keeps_plan_flat():
+    cp = compile_program(ALL["pagerank"], round_fusion=False)
+    assert not any(isinstance(n, FusedRound) for n in flatten(cp.plan))
+    loop = next(n for n in cp.plan if isinstance(n, SeqLoop))
+    assert not any(isinstance(n, FusedRound) for n in loop.body)
+
+
+def test_single_member_blocks_not_wrapped():
+    # histogram is one Fused node: nothing to group at the top level
+    cp = compile_program(ALL["histogram"])
+    assert not any(isinstance(n, FusedRound) for n in cp.plan)
+
+
+def test_fusion_preserves_results_single_device():
+    import numpy as np
+    from test_core_programs import data_for
+    for name in ("pagerank", "kmeans_step", "matrix_multiplication"):
+        ins = data_for(name)
+        a = compile_program(ALL[name]).run(dict(ins))
+        b = compile_program(ALL[name], round_fusion=False).run(dict(ins))
+        for k in a:
+            np.testing.assert_allclose(np.asarray(a[k], np.float64),
+                                       np.asarray(b[k], np.float64),
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=(name, k))
+
+
+# ---------------------------------------------------------------------------
+# slow: distributed golden + equality (subprocess: forces host devices)
+# ---------------------------------------------------------------------------
+
+_DIST_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np
+from repro.core import compile_program
+from repro.core.distributed import compile_distributed
+from repro.core.programs import ALL
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((8,), ("data",))
+rng = np.random.default_rng(5)
+
+
+def check(dp, single, ins):
+    dist = dp.run(ins)
+    for k in single:
+        a = np.asarray(dist[k], np.float64)
+        b = np.asarray(single[k], np.float64)
+        assert a.shape == b.shape, (k, a.shape, b.shape)
+        err = np.max(np.abs(a - b) / (np.abs(b) + 1.0))
+        assert err < 1e-4, (k, err)
+    return dp.explain_rounds()
+
+
+# ---- pagerank: the whole loop is ONE shard_map program with an on-device
+# while loop; N=13 not divisible by 8 exercises pad+mask inside it ----
+N = 13
+ins = dict(E=(rng.integers(0, N, 64).astype(np.float64),
+              rng.integers(0, N, 64).astype(np.float64)),
+           P=np.full(N, 1 / N), NP=np.zeros(N), C=np.zeros(N),
+           N=N, num_steps=3.0, steps=0.0, b=0.85)
+single = compile_program(ALL["pagerank"]).run(ins)
+dp = compile_distributed(ALL["pagerank"], mesh, ("data",))
+text = check(dp, single, ins)
+# ISSUE 5 acceptance golden: fused region + on-device loop, 0 host syncs
+assert "FusedRound{4 members}" in text, text
+assert "on-device lax.while_loop inside ONE fused shard_map round " \\
+       "(0 host syncs)" in text, text
+assert "fused round: 4 members, 1 shard_map program; on-device " \\
+       "lax.while_loop (0 host syncs)" in text, text
+assert "reduce(psum_scatter[cost])→NP" in text, text   # collective INSIDE
+assert "all_gather: P" in text, text                   # gather INSIDE
+assert "host-driven" not in text, text
+# second run with identical shapes: the fused program comes from the cache
+dp.run(ins)
+assert "round cache: 2 traced, 2 hits" in dp.explain_rounds(), \\
+    dp.explain_rounds()
+
+# ---- kmeans: the whole step is ONE fused top-level region ----
+npts = 24
+km = dict(P=(rng.standard_normal(npts) * 3, rng.standard_normal(npts) * 3),
+          CX=rng.standard_normal(4), CY=rng.standard_normal(4), K=4,
+          D=np.zeros((npts, 4)), MinD=np.full(npts, 1e30),
+          Cl=np.zeros(npts), SX=np.zeros(4), SY=np.zeros(4),
+          CN=np.zeros(4), NX=np.zeros(4), NY=np.zeros(4))
+single = compile_program(ALL["kmeans_step"]).run(km)
+dp = compile_distributed(ALL["kmeans_step"], mesh, ("data",))
+text = check(dp, single, km)
+assert "fused round:" in text and "1 shard_map program" in text, text
+
+# ---- REP-everything fallback: the fused-loop guard fails (stores not
+# aligned), the host-driven loop + per-member rounds take over ----
+dp_rep = compile_distributed(ALL["pagerank"], mesh, ("data",),
+                             shard_dense=False)
+single = compile_program(ALL["pagerank"]).run(ins)
+text = check(dp_rep, single, ins)
+assert "host-driven" in text, text
+assert "on-device" not in text, text
+
+# ---- round_fusion=False: per-node rounds, same results ----
+cp_off = compile_program(ALL["pagerank"], round_fusion=False)
+dp_off = compile_distributed(cp_off, mesh, ("data",))
+text = check(dp_off, single, ins)
+assert "FusedRound" not in text, text
+print("ROUND_FUSION_OK")
+"""
+
+
+@pytest.mark.slow
+def test_fused_rounds_distributed():
+    """ISSUE 5 acceptance: a distributed SeqLoop executes as ONE shard_map
+    program with an on-device lax.while_loop and zero host syncs (golden
+    explain_rounds), matching single-device results; fallbacks preserved."""
+    r = subprocess.run([sys.executable, "-c", _DIST_CODE],
+                       capture_output=True, text=True, cwd=_ROOT,
+                       timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "ROUND_FUSION_OK" in r.stdout
+
+
+_REPLICATED_LOOP_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np
+from repro.core import compile_program, loop_program
+from repro.core import dim, matrix, scalar, vector
+from repro.core.distributed import compile_distributed
+from repro.launch.mesh import make_test_mesh
+
+
+@loop_program
+def power_iter(M: matrix, v: vector, w: vector, n: dim,
+               steps: scalar, k: scalar):
+    while steps < k:
+        steps += 1.0
+        for i in range(0, n):
+            w[i] = 0.0
+        for i in range(0, n):
+            for j in range(0, n):
+                w[i] += M[i, j] * v[j]
+        for i in range(0, n):
+            v[i] = w[i] / n
+
+
+mesh = make_test_mesh((8,), ("data",))
+rng = np.random.default_rng(9)
+n = 16
+ins = dict(M=rng.standard_normal((n, n)) * 0.1,
+           v=np.full(n, 1.0 / n), w=np.zeros(n), n=n, steps=0.0, k=3.0)
+single = compile_program(power_iter).run(ins)
+
+# sharded: the loop fuses on-device (aligned stores + einsum members)
+dp = compile_distributed(power_iter, mesh, ("data",))
+dist = dp.run(ins)
+for key in single:
+    err = np.max(np.abs(np.asarray(dist[key], np.float64)
+                        - np.asarray(single[key], np.float64)))
+    assert err < 1e-4, (key, err)
+text = dp.explain_rounds()
+assert "on-device lax.while_loop inside ONE fused shard_map round" in text, \\
+    text
+
+# REP-everything: every body member classifies replicated — the loop must
+# run as ONE single-device lax.while_loop, NOT a host-driven loop with a
+# blocking condition sync per iteration (the old behaviour)
+dp_rep = compile_distributed(power_iter, mesh, ("data",),
+                             shard_dense=False)
+dist = dp_rep.run(ins)
+for key in single:
+    err = np.max(np.abs(np.asarray(dist[key], np.float64)
+                        - np.asarray(single[key], np.float64)))
+    assert err < 1e-4, ("rep", key, err)
+text = dp_rep.explain_rounds()
+assert "on-device lax.while_loop (replicated body, 0 host syncs)" in text, \\
+    text
+assert "host-driven" not in text, text
+print("REPLICATED_LOOP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_replicated_body_loop_runs_on_device(tmp_path):
+    """Satellite: a SeqLoop whose body is fully replicated routes through
+    the single-device lax.while_loop instead of paying a host condition
+    sync every iteration."""
+    script = tmp_path / "replicated_loop.py"     # @loop_program needs a file
+    script.write_text(_REPLICATED_LOOP_CODE)
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, cwd=_ROOT, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "REPLICATED_LOOP_OK" in r.stdout

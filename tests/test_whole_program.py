@@ -1,0 +1,148 @@
+"""Whole-program compilation (DESIGN.md §9): CompiledProgram.run() traces
+the ENTIRE physical plan into one cached XLA computation per (static dims,
+shapes, dtypes) signature — one dispatch per call — with the per-node eager
+path as the guaranteed fallback.  Covers the compile-cache keying contract
+(identical shapes hit the cache, different N/dtype/dims retrace — no shape
+cross-contamination), buffer donation of mutated destinations, and
+whole==eager equivalence on every benchmark program.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import compile_program
+from repro.core.programs import ALL
+from test_core_programs import data_for
+
+
+def _fresh(ins):
+    """Deep-copy an input dict (runs must not share buffers)."""
+    out = {}
+    for k, v in ins.items():
+        if isinstance(v, tuple):
+            out[k] = tuple(np.array(c) for c in v)
+        elif isinstance(v, np.ndarray):
+            out[k] = v.copy()
+        else:
+            out[k] = v
+    return out
+
+
+def _check_equal(a, b, names):
+    for k in names:
+        np.testing.assert_allclose(np.asarray(a[k], np.float64),
+                                   np.asarray(b[k], np.float64),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# eager-fallback equivalence on every benchmark program
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_whole_equals_eager(name):
+    ins = data_for(name)
+    whole = compile_program(ALL[name])
+    eager = compile_program(ALL[name], compile_mode="eager")
+    out_w = whole.run(_fresh(ins))
+    out_e = eager.run(_fresh(ins))
+    _check_equal(out_w, out_e, out_w)
+    # the whole-program path actually ran (no silent eager fallback) …
+    assert whole.trace_count == 1 and not whole._whole_disabled
+    # … and the eager configuration never traced a whole program
+    assert eager.trace_count == 0
+
+
+# ---------------------------------------------------------------------------
+# compile-cache keying
+# ---------------------------------------------------------------------------
+
+def test_identical_shapes_hit_the_cache():
+    ins = data_for("word_count")
+    cp = compile_program(ALL["word_count"])
+    a = cp.run(_fresh(ins))
+    b = cp.run(_fresh(ins))
+    assert cp.trace_count == 1 and cp.cache_hits == 1
+    _check_equal(a, b, a)
+
+
+def test_different_bag_length_retraces():
+    rng = np.random.default_rng(0)
+    cp = compile_program(ALL["word_count"])
+    ref = compile_program(ALL["word_count"], compile_mode="eager")
+    for n in (50, 80):                   # different N ⇒ new signature
+        ins = dict(W=rng.integers(0, 10, n).astype(np.float64),
+                   C=np.zeros(10))
+        _check_equal(cp.run(_fresh(ins)), ref.run(_fresh(ins)), ["C"])
+    assert cp.trace_count == 2 and cp.cache_hits == 0
+
+
+def test_different_dtype_retraces():
+    # bag columns keep their dtype (no f32 coercion): an int32 key column
+    # and a float32 one are DIFFERENT signatures and must not share a
+    # traced computation (f64 inputs coerce to f32 under jax defaults and
+    # legitimately share one)
+    rng = np.random.default_rng(1)
+    cp = compile_program(ALL["word_count"])
+    keys = rng.integers(0, 10, 32)
+    rf = cp.run(dict(W=keys.astype(np.float32), C=np.zeros(10)))
+    ri = cp.run(dict(W=keys.astype(np.int32), C=np.zeros(10)))
+    assert cp.trace_count == 2            # bag dtype is part of the key
+    np.testing.assert_allclose(np.asarray(rf["C"]), np.asarray(ri["C"]),
+                               rtol=1e-5)
+
+
+def test_different_dims_retrace():
+    rng = np.random.default_rng(2)
+    cp = compile_program(ALL["matrix_addition"])
+    for n in (4, 7):                     # dims are static: shapes differ
+        M = rng.standard_normal((n, 3))
+        out = cp.run(dict(M=M, N=M, R=np.zeros((n, 3)), n=n, m=3))
+        np.testing.assert_allclose(np.asarray(out["R"]), 2 * M, rtol=1e-5)
+    assert cp.trace_count == 2
+
+
+def test_explain_reports_compile_cache():
+    ins = data_for("group_by")
+    cp = compile_program(ALL["group_by"])
+    cp.run(_fresh(ins))
+    cp.run(_fresh(ins))
+    text = cp.explain()
+    assert "whole-program: mode=whole, 1 traced, 1 cache hits" in text
+    text_e = compile_program(ALL["group_by"], compile_mode="eager").explain()
+    assert "whole-program: mode=eager" in text_e
+
+
+# ---------------------------------------------------------------------------
+# buffer donation (mutated destinations + SeqLoop carries)
+# ---------------------------------------------------------------------------
+
+def test_donation_results_unchanged_and_buffer_freed():
+    ins = data_for("word_count")
+    ref = compile_program(ALL["word_count"], compile_mode="eager") \
+        .run(_fresh(ins))
+    cp = compile_program(ALL["word_count"], donate=True)
+    c_in = jnp.zeros(10, jnp.float32)     # dest buffer, jax-owned
+    out = cp.run(dict(W=ins["W"].copy(), C=c_in))
+    _check_equal(out, ref, ["C"])
+    # the destination buffer was donated to the computation and freed
+    assert c_in.is_deleted()
+
+
+def test_donation_seq_loop_carries():
+    ins = data_for("pagerank")
+    ref = compile_program(ALL["pagerank"], compile_mode="eager") \
+        .run(_fresh(ins))
+    cp = compile_program(ALL["pagerank"], donate=True)
+    p_in = jnp.asarray(np.full(10, 0.1), jnp.float32)   # loop carry
+    fresh = _fresh(ins)
+    fresh["P"] = p_in
+    out = cp.run(fresh)
+    _check_equal(out, ref, out)
+    assert p_in.is_deleted()
+    # numpy inputs are copied to device per call: donation stays safe on
+    # repeat runs with fresh buffers
+    out2 = cp.run(_fresh(ins))
+    _check_equal(out2, ref, out2)
+    assert cp.trace_count == 1 and cp.cache_hits == 1
