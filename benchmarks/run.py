@@ -22,6 +22,11 @@ Sections:
             a FRESH process (it forces XLA_FLAGS before importing jax);
             --check fails when shardmap is >10% slower than replicated
             on any benchmarked program (wired into CI)
+  [skew]    uniform vs Zipf(1.5) key streams through the same sharded
+            programs (skew-aware distribution, DESIGN.md §6) on a forced
+            host-device mesh; also a FRESH-process section; emits
+            BENCH_skew.json; --check fails when the Zipf stream is >20%
+            slower than uniform on any program (wired into CI)
 """
 from __future__ import annotations
 
@@ -90,21 +95,29 @@ def main() -> None:
     ap.add_argument("--dist-json-out", default=os.path.join(
         _REPO, "BENCH_distributed.json"),
         help="dist artifact path ('' disables)")
+    ap.add_argument("--skew-json-out", default=os.path.join(
+        _REPO, "BENCH_skew.json"),
+        help="skew artifact path ('' disables)")
     args = ap.parse_args()
     sections = args.sections.split(",")
-    if args.check and not {"fig3", "dist"} & set(sections):
-        ap.error("--check gates fig3 and/or dist: include one in "
+    if args.check and not {"fig3", "dist", "skew"} & set(sections):
+        ap.error("--check gates fig3, dist, and/or skew: include one in "
                  "--sections")
 
-    if "dist" in sections:
-        if sections != ["dist"]:
+    if {"dist", "skew"} & set(sections):
+        if len(sections) != 1:
             # forcing host devices would skew every other section's
             # timings (and the BENCH_programs.json perf trajectory)
-            ap.error("--sections dist must run alone (fresh process): "
-                     "it forces XLA host device count before jax loads")
+            ap.error(f"--sections {sections[0]} must run alone (fresh "
+                     "process): it forces XLA host device count before "
+                     "jax loads")
         # must run before anything imports jax: forces host device count
-        from benchmarks import distributed
-        distributed._force_devices()
+        if "dist" in sections:
+            from benchmarks import distributed
+            distributed._force_devices()
+        else:
+            from benchmarks import skew_bench
+            skew_bench._force_devices()
 
     if "table1" in sections:
         from benchmarks import translation_time
@@ -288,6 +301,22 @@ def main() -> None:
                                     for n, a, b, k in rows]}, f, indent=1)
             print(f"[dist] wrote {args.dist_json_out}")
         if args.check and distributed.check_rows(rows, args.scale):
+            check_failed = True
+
+    if "skew" in sections:
+        from benchmarks import skew_bench
+        print("[skew] uniform vs Zipf(1.5) key streams, shardmap "
+              f"({skew_bench.mesh_devices()} forced host devices)")
+        print("name,uniform_ms,zipf_ms,ratio,salted")
+        rows = skew_bench.rows(args.scale)
+        for name, u, z, s in rows:
+            print(f"{name},{u:.1f},{z:.1f},{z / u:.2f},{int(s)}")
+        print()
+        if args.skew_json_out:
+            with open(args.skew_json_out, "w") as f:
+                json.dump(skew_bench.to_json(rows, args.scale), f, indent=1)
+            print(f"[skew] wrote {args.skew_json_out}")
+        if args.check and skew_bench.check_rows(rows, args.scale):
             check_failed = True
 
     if check_failed:

@@ -1,0 +1,200 @@
+"""Skew section: uniform vs Zipf(1.5) key streams through the SAME
+sharded programs, on a forced-host-device mesh.
+
+Run standalone (forces 8 host devices before importing jax):
+
+  python benchmarks/skew_bench.py [--check]
+
+or as a section of the harness: python -m benchmarks.run --sections skew
+[--check] (emits BENCH_skew.json, uploaded as a CI artifact).
+
+What it measures: the group-by family (word_count, group_by) and the
+scatter-fed pagerank loop with (a) uniformly distributed keys and (b) a
+Zipf(1.5) stream — most rows hitting a handful of hot keys — through the
+skew-aware distribution machinery (run-time hot-key probe + salting,
+ONED_VAR rebalancing).  The artifact records both times, the ratio, and
+whether the probe actually salted a round, per program.
+
+--check is the skew regression gate (wired into the `distributed` CI
+job): it FAILS (exit 1) when the Zipf stream runs more than 20% slower
+than the uniform stream on any benchmarked program — i.e. when key skew
+degrades a sharded program beyond the gate.  The executor's dense
+partial-⊕ rounds are skew-oblivious by construction (every shard reduces
+its local block into a dense [K] partial whatever the keys), so this
+gate holds without salting on CPU; it exists to catch regressions that
+re-introduce key-dependent work, and the artifact keeps the honest
+numbers.  Flagged programs are re-measured before failing (host-device
+collective timings are noisy).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+DEVICES = 8
+ZIPF_A = 1.5
+
+
+def _force_devices():
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={DEVICES}")
+
+
+def mesh_devices() -> int:
+    """Devices actually used: respects a pre-set XLA_FLAGS (e.g. the CI
+    matrix forcing 4) instead of assuming the default of 8."""
+    import jax
+    return min(DEVICES, len(jax.devices()))
+
+
+def _keys(rng, nv: int, ne: int, skew: str):
+    """A key column in [0, nv): uniform, or Zipf(1.5) folded into range
+    (most rows land on a handful of hot keys; the hottest holds ~40%)."""
+    import numpy as np
+    if skew == "uniform":
+        return rng.integers(0, nv, ne).astype(np.float64)
+    return ((rng.zipf(ZIPF_A, ne) - 1) % nv).astype(np.float64)
+
+
+def _cases(scale: int, skew: str):
+    import numpy as np
+    rng = np.random.default_rng(29)   # same seed both skews: values match
+    nv, ne = 128 * scale, 1024 * scale
+    return {
+        "word_count": dict(W=_keys(rng, nv, ne, skew), C=np.zeros(nv)),
+        "group_by": dict(S=(_keys(rng, nv, ne, skew),
+                            rng.standard_normal(ne)), C=np.zeros(nv)),
+        "pagerank": dict(E=(_keys(rng, nv, ne, skew),
+                            _keys(rng, nv, ne, skew)),
+                         P=np.full(nv, 1 / nv), NP=np.zeros(nv),
+                         C=np.zeros(nv), N=nv, num_steps=2.0, steps=0.0,
+                         b=0.85),
+    }
+
+
+def _time_pair(fn_a, fn_b, pairs=5, reps=2):
+    """(min_a_ms, min_b_ms) over interleaved passes — the methodology of
+    benchmarks/distributed.py: adjacent passes see the same machine
+    conditions, the min absorbs host-collective spikes."""
+    import numpy as np
+
+    def one_pass(fn):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for v in fn().values():
+                np.asarray(v)
+        return (time.perf_counter() - t0) / reps * 1e3
+
+    for fn in (fn_a, fn_b):                # warm-up / compile, synchronized
+        for v in fn().values():
+            np.asarray(v)
+    ta, tb = [], []
+    for i in range(pairs):
+        if i % 2 == 0:
+            ta.append(one_pass(fn_a))
+            tb.append(one_pass(fn_b))
+        else:
+            tb.append(one_pass(fn_b))
+            ta.append(one_pass(fn_a))
+    return min(ta), min(tb)
+
+
+def rows(scale: int = 1, only=None, pairs: int = 5):
+    """[(name, uniform_ms, zipf_ms, salted)] on a forced host mesh.  Both
+    skews run through the SAME DistributedProgram — the run-time probe
+    keys the compile cache, so the Zipf stream traces its own (possibly
+    salted) rounds.  `salted` reports whether any round of the Zipf run
+    actually salted (the probe is data-driven; on CPU the cost model
+    keeps S=1, so this is normally False here and True on TPU)."""
+    _force_devices()
+    from repro.core import compile_program
+    from repro.core.distributed import compile_distributed
+    from repro.core.programs import ALL
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((mesh_devices(),), ("data",))
+    out = []
+    for name in ("word_count", "group_by", "pagerank"):
+        if only is not None and name not in only:
+            continue
+        uni = _cases(scale, "uniform")[name]
+        zipf = _cases(scale, "zipf")[name]
+        cp = compile_program(ALL[name])
+        dp = compile_distributed(cp, mesh, ("data",), mode="shardmap")
+        t_uni, t_zipf = _time_pair(lambda: dp.run(uni),
+                                   lambda: dp.run(zipf), pairs=pairs)
+        dp.run(zipf)      # strategy snapshot of the zipf rounds
+        salted = "salt=" in dp.explain_rounds()
+        out.append((name, t_uni, t_zipf, salted))
+    return out
+
+
+_SKEW_GATE = 1.20     # zipf >20% slower than uniform fails
+
+
+def check_rows(measured, scale: int = 1) -> bool:
+    """The skewed-vs-uniform regression gate.  True = FAILED.  A program
+    is flagged when zipf > 1.2 × uniform; flagged programs are
+    re-measured independently and only a reproduced slowdown fails."""
+    def _bad(rws):
+        return {n: (u, z) for n, u, z, _s in rws if z > u * _SKEW_GATE}
+    bad = _bad(measured)
+    if bad:
+        print(f"[skew] {len(bad)} candidate slowdown(s): "
+              f"{','.join(sorted(bad))}; re-measuring to confirm")
+        rerun = rows(scale, only=frozenset(bad), pairs=11)
+        bad = {n: v for n, v in _bad(rerun).items() if n in bad}
+    if bad:
+        print("[skew] SKEWED-KEY GATE FAILED (Zipf(1.5) >20% slower than "
+              "uniform, confirmed by re-measurement):")
+        for n, (u, z) in sorted(bad.items()):
+            print(f"  {n}: zipf {z:.1f}ms vs uniform {u:.1f}ms "
+                  f"({z / u:.2f}x)")
+        return True
+    print(f"[skew] skewed-key gate OK ({len(measured)} programs, "
+          f"zipf <= {_SKEW_GATE:.2f}x uniform everywhere)")
+    return False
+
+
+def to_json(measured, scale: int) -> dict:
+    return {
+        "section": "skew",
+        "unit": "ms_per_run",
+        "devices": mesh_devices(),
+        "scale": scale,
+        "zipf_a": ZIPF_A,
+        "gate": _SKEW_GATE,
+        "rows": [dict(name=n, uniform_ms=round(u, 2), zipf_ms=round(z, 2),
+                      ratio=round(z / u, 3) if u else None, salted=s)
+                 for n, u, z, s in measured],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--json-out", default=None,
+                    help="write BENCH_skew.json-style artifact here")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when zipf is >20%% slower than uniform "
+                         "on any program (re-measured to confirm)")
+    args = ap.parse_args()
+    measured = rows(args.scale)
+    print("name,uniform_ms,zipf_ms,ratio,salted")
+    for name, u, z, s in measured:
+        print(f"{name},{u:.1f},{z:.1f},{z / u:.2f},{int(s)}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(to_json(measured, args.scale), f, indent=1)
+    if args.check and check_rows(measured, args.scale):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,9 @@
 #   → passes.plan_program (optimizer pipeline → physical-plan IR, plan.py:
 #     Rules 16/17, einsum recognition, §5 tiled fusion, DSE, update fusion,
 #     distribution analysis: dist_analysis.py infers a per-array sharding
-#     REP ≤ ONED_ROW ≤ TWOD_BLOCK, printed by CompiledProgram.explain())
+#     REP ≤ ONED_VAR ≤ ONED_ROW ≤ TWOD_BLOCK — ONED_VAR marks bag-derived/
+#     filtered arrays with variable live blocks, rebalanced to ONED_ROW
+#     only where readers need it — printed by CompiledProgram.explain())
 #   → lower.PlanExecutor (plan nodes → JAX, runtime guards + fallbacks)
 #   → distributed (shard_map / gspmd execution of the same plan over a mesh;
 #     bags AND inferred-ONED_ROW dense arrays shard as row blocks)

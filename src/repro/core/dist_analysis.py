@@ -8,10 +8,16 @@ past one device's memory.  This pass closes that gap the HPAT way
 (Totoni et al., `distributed_analysis.py`): a fixed-point inference over
 the physical plan assigning each array a distribution from the lattice
 
-    REP  ≤  ONED_ROW  ≤  TWOD_BLOCK
+    REP  ≤  ONED_VAR  ≤  ONED_ROW  ≤  TWOD_BLOCK
 
     REP         replicated on every device (always-correct fallback, ⊥)
-    ONED_ROW    block-partitioned along dim 0 over the dp mesh axes
+    ONED_VAR    row-partitioned along dim 0 with VARIABLE per-shard live
+                lengths (HPAT's OneD_Var): bag-derived and filtered
+                arrays, whose live extent is data-dependent — each shard
+                holds an equal physical block but a different logical row
+                count (the pad+mask limit)
+    ONED_ROW    block-partitioned along dim 0 over the dp mesh axes,
+                equal (balanced) live blocks
     TWOD_BLOCK  2-D block-partition candidate (matmul operands); the
                 current executors place it as ONED_ROW — the lattice
                 point records that a 2-D placement would be legal
@@ -30,10 +36,23 @@ fixed point exists and is reached monotonically.  Two HPAT-style sweeps:
                     survives only for pure matmul operands.
 
 The sweeps repeat until no distribution changes (the lattice has height
-2, so at most a few iterations).  Loop-carried arrays need no extra
+3, so at most a few iterations).  Loop-carried arrays need no extra
 constraint: a distribution is a property of the *array*, not of a program
 point, so a SeqLoop body sees one stable sharding across iterations by
 construction — the meet over all its writers.
+
+After the base fixed point, a `_rebalance` pass (HPAT's `_rebalance_arrs`
+re-run idiom) revisits every array left at ONED_VAR and decides whether
+variable blocks are acceptable where it is consumed.  Readers that only
+walk the producing axis element-wise tolerate skewed blocks, so the array
+KEEPS ONED_VAR and the rebalance is *elided*; a reader that slices by
+global offsets (a contraction certificate) or re-reads the array across
+SeqLoop iterations needs balanced blocks, so the array is pinned up to
+ONED_ROW — recording that an explicit rebalance round must be *inserted*
+after its producer — and the whole analysis re-runs with the pin until no
+new pin appears.  `analyze(..., rebalance_out=...)` reports the final
+{array: "inserted" | "elided"} decisions; pass_distribution materializes
+the inserted ones as `plan.Rebalance` nodes.
 
 Guarantee: a changed distribution never changes a result, only its
 placement.  Every node keeps a replicated execution path (distributed.py
@@ -61,8 +80,9 @@ from .loop_ast import BinOp, Call, Const, Program, UnOp, Var
 class Dist(IntEnum):
     """The distribution lattice; smaller = more replicated (meet = min)."""
     REP = 0
-    ONED_ROW = 1
-    TWOD_BLOCK = 2
+    ONED_VAR = 1      # row-partitioned, variable per-shard live lengths
+    ONED_ROW = 2
+    TWOD_BLOCK = 3
 
 
 def meet(a: Dist, b: Dist) -> Dist:
@@ -76,8 +96,8 @@ class Sharding:
     axis: Optional[str] = None    # aligned iteration-axis var, when known
 
     def __str__(self) -> str:
-        if self.dist == Dist.ONED_ROW and self.axis:
-            return f"ONED_ROW({self.axis})"
+        if self.dist >= Dist.ONED_VAR and self.axis:
+            return f"{self.dist.name}({self.axis})"
         return self.dist.name
 
 
@@ -314,6 +334,8 @@ def demotable_dests(nodes, prog: Program) -> dict:
 def _dest_cap(node) -> Optional[Dist]:
     """Best distribution the distributed executor can PRODUCE for this
     node's destination; None when the destination is a scalar."""
+    if isinstance(node, P.Rebalance):
+        return Dist.ONED_ROW          # the round's whole point: balance
     if isinstance(node, P.ScalarReduce):
         if node.point is None:
             return None               # scalar destination
@@ -324,6 +346,11 @@ def _dest_cap(node) -> Optional[Dist]:
         return Dist.ONED_ROW if node.space.has_bag else Dist.REP
     if isinstance(node, (P.AxisReduce, P.EinsumContract, P.TiledMatmul)):
         if node.space.has_bag:
+            ra = round_axis(node)
+            if ra is not None and ra == leading_key_var(node):
+                # dest rows walk the bag itself (e.g. a per-point min):
+                # live row counts are data-dependent → variable blocks
+                return Dist.ONED_VAR
             return Dist.ONED_ROW      # unaligned partial + psum_scatter
         return Dist.ONED_ROW if round_axis(node) is not None else Dist.REP
     if isinstance(node, (P.MapExpr, P.Scatter)):
@@ -331,7 +358,16 @@ def _dest_cap(node) -> Optional[Dist]:
             return None               # guarded scalar assignment
         ra = round_axis(node)
         if ra is not None and ra == leading_key_var(node):
-            return Dist.ONED_ROW      # aligned store round, rows stay local
+            # aligned store round, rows stay local.  A bag-driven or
+            # filtered write leaves DATA-DEPENDENT live row counts per
+            # shard (HPAT's OneD_Var): the physical blocks stay equal but
+            # the logical lengths vary, so the best the executor can
+            # claim is ONED_VAR; _rebalance later decides whether a
+            # reader needs the blocks rebalanced up to ONED_ROW.
+            bagvars = {a.var for a in node.space.axes if a.kind == "bag"}
+            if ra in bagvars or node.space.conds:
+                return Dist.ONED_VAR
+            return Dist.ONED_ROW
         return Dist.REP               # scattered writes cross shards
     return Dist.REP
 
@@ -355,45 +391,106 @@ def _matmul_operands(node) -> frozenset:
 # the analysis
 # ---------------------------------------------------------------------------
 
-def analyze(nodes: list, prog: Program, config=None) -> dict:
+def _rebalance_targets(nodes) -> frozenset:
+    """Arrays that, were they left at ONED_VAR, would break or degrade a
+    consumer: contraction-certified readers slice factors by GLOBAL
+    offsets (shard_slice_certificates assumes equal live blocks), and
+    SeqLoop-touched state is re-read every iteration (a skewed block
+    compounds across rounds).  Everything else — element-wise readers
+    walking the producing axis, computed-key gathers — tolerates variable
+    blocks and lets the array keep ONED_VAR."""
+    out: set = set()
+    for n in leaf_nodes(nodes):
+        groups = _contract_groups(n)
+        if groups:
+            for factors, _axes in groups:
+                out.update(f.array for f in factors)
+    for n in _all_nodes(nodes):
+        if isinstance(n, P.SeqLoop):
+            for m in leaf_nodes(n.body):
+                out.update(gathers_of(m))
+                d = getattr(m, "dest", None)
+                if d is not None:
+                    out.add(d)
+    return frozenset(out)
+
+
+def analyze(nodes: list, prog: Program, config=None,
+            rebalance_out: Optional[dict] = None) -> dict:
     """Infer array distributions by fixed-point meet; annotate every leaf
-    node with its `shardings` dict and return {array: Dist}."""
+    node with its `shardings` dict and return {array: Dist}.
+
+    When `rebalance_out` is given it is filled with the `_rebalance`
+    decisions: {array: "inserted"} for ONED_VAR arrays pinned up to
+    ONED_ROW (an explicit rebalance round must restore balanced blocks
+    after their producer) and {array: "elided"} for arrays that keep
+    variable blocks."""
     dense = dense_arrays(prog)
     if config is not None and not getattr(config, "infer_distributions", True):
         dists = {a: Dist.REP for a in dense}
         _annotate(nodes, dists)
         return dists
 
-    dists = {a: Dist.TWOD_BLOCK for a in dense}   # optimistic top
+    pins: set = set()       # ONED_VAR arrays lifted to ONED_ROW by rebalance
 
-    def cap(name, d):
-        if name in dists and dists[name] > d:
-            dists[name] = Dist(d)
-            return True
-        return False
+    def run_base() -> dict:
+        dists = {a: Dist.TWOD_BLOCK for a in dense}   # optimistic top
 
-    changed = True
-    while changed:                    # monotone descent on a height-2 lattice
-        changed = False
-        # sweep 1: write-side constraints (what each node can produce)
-        for n in _all_nodes(nodes):
-            if isinstance(n, P.SeqLoop):
-                acc: dict = {}
-                _walk_gathers(n.cond, acc)
-                for name in acc:      # cond is evaluated replicated
-                    changed |= cap(name, Dist.REP)
-                continue
-            dc = _dest_cap(n)
-            if dc is not None and n.dest in dists:
-                changed |= cap(n.dest, dc)
-        # sweep 2: read-side rebalance (TWOD only for pure matmul operands)
-        for n in leaf_nodes(nodes):
-            mm = _matmul_operands(n)
-            for name in gathers_of(n):
-                if name not in mm:
-                    changed |= cap(name, Dist.ONED_ROW)
-            if getattr(n, "dest", None) in dists and n.dest not in mm:
-                changed |= cap(n.dest, Dist.ONED_ROW)
+        def cap(name, d):
+            if d == Dist.ONED_VAR and name in pins:
+                d = Dist.ONED_ROW   # a rebalance round restores balance
+            if name in dists and dists[name] > d:
+                dists[name] = Dist(d)
+                return True
+            return False
+
+        changed = True
+        while changed:                # monotone descent, lattice height 3
+            changed = False
+            # sweep 1: write-side constraints (what each node can produce)
+            for n in _all_nodes(nodes):
+                if isinstance(n, P.SeqLoop):
+                    acc: dict = {}
+                    _walk_gathers(n.cond, acc)
+                    for name in acc:      # cond is evaluated replicated
+                        changed |= cap(name, Dist.REP)
+                    continue
+                dc = _dest_cap(n)
+                if dc is not None and n.dest in dists:
+                    changed |= cap(n.dest, dc)
+            # sweep 2: read-side rebalance (TWOD only for matmul operands)
+            for n in leaf_nodes(nodes):
+                mm = _matmul_operands(n)
+                for name in gathers_of(n):
+                    if name not in mm:
+                        changed |= cap(name, Dist.ONED_ROW)
+                if getattr(n, "dest", None) in dists and n.dest not in mm:
+                    changed |= cap(n.dest, Dist.ONED_ROW)
+        return dists
+
+    # HPAT's _rebalance_arrs idiom: run to fixed point, promote ONED_VAR
+    # arrays whose consumers need balanced blocks, and re-run the whole
+    # analysis with the pins until no new pin appears (each iteration can
+    # only ADD pins, so this terminates in ≤ |dense| re-runs).
+    # skew_rebalance=False disables promotion entirely: every ONED_VAR
+    # array keeps variable blocks (the pad+mask fallback), and
+    # pass_distribution then inserts no Rebalance nodes.
+    needs = _rebalance_targets(nodes) \
+        if config is None or getattr(config, "skew_rebalance", True) \
+        else frozenset()
+    while True:
+        dists = run_base()
+        promote = {a for a, d in dists.items()
+                   if d == Dist.ONED_VAR and a in needs} - pins
+        if not promote:
+            break
+        pins |= promote
+    if rebalance_out is not None:
+        for a in sorted(pins):
+            if dists[a] >= Dist.ONED_ROW:   # still sharded after the pin
+                rebalance_out[a] = "inserted"
+        for a in sorted(a for a, d in dists.items() if d == Dist.ONED_VAR):
+            rebalance_out[a] = "elided"
 
     _annotate(nodes, dists)
     return dists
@@ -422,13 +519,13 @@ def _annotate(nodes, dists: dict):
             lead = leading_key_var(n)
             sh[dest] = Sharding(dists[dest],
                                 lead if lead == axis and
-                                dists[dest] >= Dist.ONED_ROW else None)
+                                dists[dest] >= Dist.ONED_VAR else None)
         ar = aligned_reads(n, axis) if axis else frozenset()
         for name in sorted(gathers_of(n)):
             if name in dists and name != dest:
                 sh[name] = Sharding(dists[name],
                                     axis if name in ar and
-                                    dists[name] >= Dist.ONED_ROW else None)
+                                    dists[name] >= Dist.ONED_VAR else None)
         n.shardings = sh
         if isinstance(n, P.TiledMatmul):
             n.contract.shardings = sh   # explain() shows the dense-lhs form

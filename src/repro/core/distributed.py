@@ -29,7 +29,21 @@ parameters (lower.ExecContext), not lowerer state.
                            backend the selector picks for the SHARD-LOCAL
                            (N/P, K) shape class.  This is the
                            reduction-based replacement for the paper's
-                           shuffle-based group-by.
+                           shuffle-based group-by.  When the trace-time
+                           hot-key probe (or a static hint) salts the
+                           group-by (DESIGN.md §6), the shard-local
+                           partial is computed over key*S+salt
+                           sub-destinations and ⊕-folded back to [K]
+                           BEFORE the exchange — the wire format never
+                           changes.
+    rebalance round        plan.Rebalance (ONED_VAR → ONED_ROW): per-shard
+                           live-row counts exchange via psum, exclusive
+                           cumsum assigns every live row its global slot,
+                           and one psum_scatter all-to-all restores equal
+                           blocks — exact (pure data movement, no ⊕).
+                           Elided when the array is already balanced or
+                           replicated; explain_rounds() prints the
+                           per-shard counts and balance factor either way.
     replicated             everything else — identical on all shards; also
                            the guaranteed fallback whenever a runtime shape
                            guard fails.  Correct regardless of placement:
@@ -91,7 +105,8 @@ from ..compat import shard_map
 from . import plan
 from .dist_analysis import (Dist, aligned_reads, leading_key_var,
                             round_axis, shard_slice_certificates)
-from .lower import COMBINE, CompiledProgram, ExecContext, identity
+from .lower import (COMBINE, CompiledProgram, ExecContext, identity,
+                    salt_for_node)
 
 _STORE_NODES = (plan.MapExpr, plan.Scatter)
 _ALIGNABLE_REDUCES = (plan.AxisReduce, plan.EinsumContract, plan.TiledMatmul)
@@ -151,9 +166,19 @@ class DistributedProgram:
         # names): expression trees are walked once per node, not once per
         # SeqLoop iteration
         self._static_cache: dict = {}
+        # skew observability (explain_rounds "balance:" lines): per-run
+        # per-shard live row counts + max/mean factor for every ONED_VAR /
+        # rebalanced array, and the analysis' insert-vs-elide decision
+        self._rebalanced = frozenset(
+            n.dest for n in _walk_plan(cp.plan)
+            if isinstance(n, plan.Rebalance))
+        self._balance: dict = {}
 
     def _placed_oned(self, name) -> bool:
-        return self.placements.get(name, Dist.REP) >= Dist.ONED_ROW
+        # ONED_VAR counts: variable-length arrays still shard as equal
+        # physical row blocks — only their LOGICAL live lengths differ
+        # (tracked by the array limit and masked like every padded array)
+        return self.placements.get(name, Dist.REP) >= Dist.ONED_VAR
 
     # ------------------------- input placement -------------------------
     def place(self, inputs: dict):
@@ -247,6 +272,85 @@ class DistributedProgram:
         full = self._psum(part, op)
         blk = full.shape[0] // self.dp_n
         return jax.lax.dynamic_slice_in_dim(full, shard * blk, blk, axis=0)
+
+    # ------------------- rebalance rounds (ONED_VAR → ONED_ROW) ----------
+    def _rebalance_local(self, x, shard, lim):
+        """The rebalance round body, inside a shard_map trace: per-shard
+        size exchange (one-hot `psum` of live-row counts), exclusive-cumsum
+        global offsets, scatter of live rows to their balanced global
+        positions, then a `psum_scatter` redistribution back to equal row
+        blocks.  Each target position receives exactly ONE nonzero addend
+        (every other shard contributes the zero buffer row), so the
+        composition is an exact all-to-all, not an approximate reduction —
+        bit-identical results on canonical front-packed layouts."""
+        blk = x.shape[0]
+        npad = blk * self.dp_n
+        rows = shard * blk + jnp.arange(blk)
+        live = rows < lim
+        cnt = jnp.sum(live.astype(jnp.int32))
+        # size exchange: every shard learns every live count
+        counts = jax.lax.psum(
+            jnp.where(jnp.arange(self.dp_n) == shard, cnt, 0), self.dp)
+        start = (jnp.cumsum(counts) - counts)[shard]   # exclusive cumsum
+        pos = start + jnp.cumsum(live.astype(jnp.int32)) - 1
+        pos = jnp.where(live, pos, npad)               # dead rows drop
+        buf = jnp.zeros((npad,) + tuple(x.shape[1:]), x.dtype)
+        buf = buf.at[pos].add(x, mode="drop")
+        return jax.lax.psum_scatter(buf, self.dp, scatter_dimension=0,
+                                    tiled=True)
+
+    def _shard_counts(self, npad: int, lim):
+        """Host-side mirror of the size exchange (for observability): the
+        logical live row count each shard holds under the canonical
+        front-packed layout, plus the max/mean balance factor."""
+        blk = npad // self.dp_n
+        if lim is None:
+            lim = npad
+        counts = [max(0, min(blk, lim - s * blk)) for s in range(self.dp_n)]
+        mean = sum(counts) / len(counts)
+        factor = (max(counts) / mean) if mean else float("inf")
+        return counts, factor
+
+    def _exec_rebalance(self, node, env, array_limits):
+        """Run a plan.Rebalance as its own cached jit+shard_map round (the
+        fused-region path inlines `_rebalance_local` instead).  Elided —
+        with an explain_rounds note — when the destination is replicated
+        (nothing to balance) or carries no limit (blocks already equal)."""
+        dest = node.dest
+        if not self._placed_oned(dest):
+            self._strategy[id(node)] = "rebalance: elided (replicated dest)"
+            return
+        v = jnp.asarray(env[dest])
+        npad = int(v.shape[0])
+        blk = npad // self.dp_n
+        lim = array_limits.get(dest)
+        if lim is None:
+            self._strategy[id(node)] = (
+                f"rebalance: elided (already balanced, {blk} rows × "
+                f"{self.dp_n} shards)")
+            return
+        cache_key = ("rebalance", id(node), tuple(v.shape), str(v.dtype),
+                     lim)
+        fn = self._round_cache.get(cache_key)
+        if fn is None:
+            def local_fn(x, _lim=lim):
+                shard = 0
+                for a in self.dp:
+                    shard = shard * self.mesh.shape[a] + \
+                        jax.lax.axis_index(a)
+                return self._rebalance_local(x, shard, _lim)
+            fn = jax.jit(shard_map(local_fn, mesh=self.mesh,
+                                   in_specs=(P(self.dp),),
+                                   out_specs=P(self.dp)))
+            self._round_cache[cache_key] = fn
+            self._round_traces += 1
+        else:
+            self._round_hits += 1
+        env[dest] = fn(env[dest])
+        counts, factor = self._shard_counts(npad, lim)
+        self._strategy[id(node)] = (
+            f"rebalance(size-exchange psum + all-to-all psum_scatter)"
+            f"→{dest}; rows/shard={counts} balance={factor:.2f}")
 
     # ---- per-node round classification (runtime shape guards) ----
     def _rows(self, name, env) -> int:
@@ -374,6 +478,10 @@ class DistributedProgram:
                 self._exec_shardmap(node.parts, env, limits, array_limits)
                 continue
 
+            if isinstance(node, plan.Rebalance):
+                self._exec_rebalance(node, env, array_limits)
+                continue
+
             spec = self._round_spec(node, env) \
                 if (plan.is_reduce(node) or isinstance(node, _STORE_NODES)) \
                 else None
@@ -467,6 +575,18 @@ class DistributedProgram:
                     nshards=self.dp_n, n_local=n_loc,
                     dest_dist="ONED_ROW" if dest_oned[p.dest] else "REP")
 
+        # run-time hot-key probe (skew salting): resolved against the
+        # concrete key columns HERE, outside the trace — the factor is
+        # part of the cache key, so a skewed and a uniform stream of the
+        # same shapes trace different rounds
+        salts = {}
+        for p in parts:
+            s = salt_for_node(p, env, cp.selector,
+                              getattr(cp.config, "skew_salting", "auto"),
+                              nshards=self.dp_n, bag_limits=limits)
+            if s > 1:
+                salts[p.dest] = s
+
         # everything local_fn closes over, so the traced round is reusable
         cache_key = (id(node), tuple(kinds), tuple(names),
                      tuple(store_dests), gathered, tuple(sorted(local)),
@@ -477,7 +597,8 @@ class DistributedProgram:
                      spec["axis"], spec["rng"],
                      tuple(sorted(self._demoted)),
                      tuple(sorted((d, x.backend)
-                                  for d, x in exchanges.items())))
+                                  for d, x in exchanges.items())),
+                     tuple(sorted(salts.items())))
         fn = self._round_cache.get(cache_key)
         if fn is not None:
             self._round_hits += 1
@@ -499,7 +620,8 @@ class DistributedProgram:
                      _local=tuple(local), _lims=node_lims, _alims=arr_lims,
                      _dims=dims, _shapes=dest_shapes, _dtypes=dest_dtypes,
                      _axis=axis, _rng=rng,
-                     _exch={d: x.backend for d, x in exchanges.items()}):
+                     _exch={d: x.backend for d, x in exchanges.items()},
+                     _salts=salts):
             e2 = dict(zip(_names + _stores, vals))
             e2.update(_dims)
             # globalize indexes: shard-local row r is offset + r (needed
@@ -528,7 +650,7 @@ class DistributedProgram:
                     ro[p.dest] = shard * e2[p.dest].shape[0]
                     cert.add(p.dest)
                     ctx = ExecContext(offs, _lims, ro, _alims, axis_ov,
-                                      frozenset(cert))
+                                      frozenset(cert), _salts)
                     outs.append(cp.executor.run_node(p, e2, ctx))
                 elif k == "aligned":
                     blk0 = shp[0] // self.dp_n
@@ -537,12 +659,12 @@ class DistributedProgram:
                     ro[p.dest] = shard * blk0
                     cert.add(p.dest)
                     ctx = ExecContext(offs, _lims, ro, _alims, axis_ov,
-                                      frozenset(cert))
+                                      frozenset(cert), _salts)
                     outs.append(cp.executor.run_node(p, e2, ctx))
                 else:
                     e2[p.dest] = jnp.full(shp, identity(p.op, dt))
                     ctx = ExecContext(offs, _lims, ro, _alims, axis_ov,
-                                      frozenset(cert))
+                                      frozenset(cert), _salts)
                     part_res = cp.executor.run_node(p, e2, ctx)
                     outs.append(self._combine_shard(
                         part_res, p.op, shard, dest_oned[p.dest],
@@ -619,6 +741,9 @@ class DistributedProgram:
         # ---- classify members against runtime shapes ----
         units = []
         for m in region.parts:
+            if isinstance(m, plan.Rebalance):
+                units.append(("rebalance", m, None))
+                continue
             spec = self._round_spec(m, env) \
                 if (plan.is_reduce(m) or isinstance(m, _STORE_NODES)) \
                 else None
@@ -668,6 +793,13 @@ class DistributedProgram:
         instrs = []
         exchanges_all = {}
         for kind, m, spec in units:
+            if kind == "rebalance":
+                # active only when the dest is a row-block at this point
+                # AND carries a logical limit (else blocks already equal)
+                lim = array_limits.get(m.dest)
+                active = reps.get(m.dest) == "block" and lim is not None
+                instrs.append(("rebalance", m, active, lim))
+                continue
             if kind == "scalar":
                 reads = sorted(n for n in m.reads if n not in dims)
                 g = tuple(n for n in reads if reps.get(n) == "block")
@@ -710,10 +842,17 @@ class DistributedProgram:
                     convs.append((p.dest, need))
                 reps[p.dest] = need
             exchanges_all.update(exch)
+            salts = {}
+            for p in parts:
+                s = salt_for_node(p, env, cp.selector,
+                                  getattr(cp.config, "skew_salting", "auto"),
+                                  nshards=self.dp_n, bag_limits=limits)
+                if s > 1:
+                    salts[p.dest] = s
             instrs.append(("round", m, parts, tuple(kinds), axis, rng,
                            gathered, local_eff, tuple(convs),
                            {d: x.backend for d, x in exch.items()},
-                           tuple(doned), bagnames))
+                           tuple(doned), bagnames, salts))
         endconvs = []
         if loop is not None:
             # while_loop carries need a stable representation: convert
@@ -752,11 +891,17 @@ class DistributedProgram:
             args.append(v)
         out_specs = tuple(P(self.dp) if reps[d] == "block" else P()
                           for d in dests_order)
+        def _ikey(i):
+            if i[0] == "scalar":
+                return (i[0], id(i[1]), i[2])
+            if i[0] == "rebalance":
+                return (i[0], id(i[1]), i[2], i[3])
+            return (i[0], id(i[1]), i[3], i[4], i[5], i[6], i[7], i[8],
+                    tuple(sorted(i[9].items())), i[10], i[11],
+                    tuple(sorted(i[12].items())))
+
         cache_key = ("fused", bail_key, tuple(sig),
-                     tuple((i[0], id(i[1]), i[2] if i[0] == "scalar" else
-                            (i[3], i[4], i[5], i[6], i[7], i[8],
-                             tuple(sorted(i[9].items())), i[10], i[11]))
-                           for i in instrs),
+                     tuple(_ikey(i) for i in instrs),
                      tuple(endconvs), tuple(sorted(node_lims.items())),
                      tuple(sorted(arr_lims.items())),
                      tuple(sorted(dims.items())),
@@ -785,8 +930,23 @@ class DistributedProgram:
             if instr[0] == "scalar":
                 strat[id(instr[1])] = "replicated scalar (inside fused round)"
                 continue
+            if instr[0] == "rebalance":
+                _t, m, active, lim = instr
+                if active:
+                    cts, fac = self._shard_counts(
+                        int(jnp.shape(env[m.dest])[0]), lim)
+                    strat[id(m)] = (
+                        f"rebalance(size-exchange psum + all-to-all "
+                        f"psum_scatter)→{m.dest} (inside fused round); "
+                        f"rows/shard={cts} balance={fac:.2f}")
+                else:
+                    strat[id(m)] = ("rebalance: elided ("
+                                    + ("already balanced"
+                                       if reps.get(m.dest) == "block"
+                                       else "replicated dest") + ")")
+                continue
             (_t, m, parts, kinds, axis, _rng, gathered, local_eff,
-             _convs, exch_b, doned, _bags) = instr
+             _convs, exch_b, doned, _bags, _salts) = instr
             strat[id(m)] = self._round_desc(
                 parts, kinds, axis, exchanges_all,
                 {p.dest: o for p, o in zip(parts, doned)},
@@ -821,6 +981,12 @@ class DistributedProgram:
 
             def run_body(e2):
                 for instr in instrs:
+                    if instr[0] == "rebalance":
+                        _t, m, active, lim = instr
+                        if active:
+                            e2[m.dest] = self._rebalance_local(
+                                jnp.asarray(e2[m.dest]), shard, lim)
+                        continue
                     if instr[0] == "scalar":
                         _t, m, g = instr
                         eu = dict(e2)
@@ -831,7 +997,7 @@ class DistributedProgram:
                         e2[m.dest] = cp.executor.run_node(m, eu, ctx)
                         continue
                     (_t, m, parts, kinds, axis, rng, gathered, local_eff,
-                     convs, exch, doned, bagnames) = instr
+                     convs, exch, doned, bagnames, salts) = instr
                     for d, need in convs:
                         convert(e2, d, need)
                     eu = dict(e2)
@@ -853,7 +1019,8 @@ class DistributedProgram:
                             ro[p.dest] = shard * eu[p.dest].shape[0]
                             cert.add(p.dest)
                             ctx = ExecContext(offs, node_lims, ro, arr_lims,
-                                              axis_ov, frozenset(cert))
+                                              axis_ov, frozenset(cert),
+                                              salts)
                             e2[p.dest] = cp.executor.run_node(p, eu, ctx)
                         elif k == "aligned":
                             prev = e2[p.dest]
@@ -863,14 +1030,16 @@ class DistributedProgram:
                             ro[p.dest] = shard * blk0
                             cert.add(p.dest)
                             ctx = ExecContext(offs, node_lims, ro, arr_lims,
-                                              axis_ov, frozenset(cert))
+                                              axis_ov, frozenset(cert),
+                                              salts)
                             res = cp.executor.run_node(p, eu, ctx)
                             e2[p.dest] = COMBINE[p.op](prev, res)
                         else:             # unaligned reduce
                             prev = jnp.asarray(e2[p.dest])
                             eu[p.dest] = jnp.full(shp, identity(p.op, dt))
                             ctx = ExecContext(offs, node_lims, ro, arr_lims,
-                                              axis_ov, frozenset(cert))
+                                              axis_ov, frozenset(cert),
+                                              salts)
                             part_res = cp.executor.run_node(p, eu, ctx)
                             exchd = self._combine_shard(
                                 part_res, p.op, shard, oned,
@@ -964,6 +1133,11 @@ class DistributedProgram:
             out.append("placement: " + ", ".join(
                 f"{n}→REP (dest-{d.backend}[{d.source}])"
                 for n, d in sorted(self._demoted.items())))
+        # skew observability: live rows per shard + max/mean balance factor
+        # for every variable-length (ONED_VAR / rebalanced) array
+        for n, (cts, fac, kind) in sorted(self._balance.items()):
+            out.append(f"balance[{n}]: rows/shard={cts} "
+                       f"factor={fac:.2f} ({kind})")
         self._round_lines(self.cp.plan, 0, out)
         return "\n".join(out)
 
@@ -1006,6 +1180,24 @@ class DistributedProgram:
                     v, jnp.float32 if t.dtype == "float" else jnp.int32)
             else:
                 env[name] = v
+        # balance observability for explain_rounds(): the per-shard live
+        # row counts every ONED_VAR / rebalanced array holds THIS run
+        self._balance = {}
+        for name, d in self.dists.items():
+            if name in self._rebalanced:
+                kind = "rebalance inserted"
+            elif d == Dist.ONED_VAR:
+                kind = "rebalance elided"
+            else:
+                continue
+            if not self._placed_oned(name):
+                continue
+            shp = jnp.shape(env[name])
+            if not shp:
+                continue
+            cts, fac = self._shard_counts(int(shp[0]),
+                                          array_limits.get(name))
+            self._balance[name] = (cts, fac, kind)
         if self.mode == "gspmd":
             self.cp.execute(env, bag_limits=limits,
                             array_limits=array_limits)
@@ -1022,6 +1214,20 @@ class DistributedProgram:
 def _gather_names(node) -> frozenset:
     from .dist_analysis import gathers_of
     return frozenset(gathers_of(node))
+
+
+def _walk_plan(nodes):
+    """Every leaf plan node, containers opened (SeqLoop bodies, FusedRound
+    regions, Fused parts)."""
+    for n in nodes:
+        if isinstance(n, plan.SeqLoop):
+            yield from _walk_plan(n.body)
+        elif isinstance(n, plan.FusedRound):
+            yield from _walk_plan(n.parts)
+        elif isinstance(n, plan.Fused):
+            yield from n.parts
+        else:
+            yield n
 
 
 def compile_distributed(fn_or_prog, mesh, dp_axes=("data",),

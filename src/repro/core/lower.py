@@ -166,6 +166,17 @@ class ExecContext:
                       physical rows tile exactly like the axis, so the
                       executor may treat the traced window start as a
                       static local 0.
+      salts           group-by dest → salt factor S resolved by the
+                      RUN-TIME hot-key probe (op_select.probe_hot_fraction
+                      + choose_salt) for this call's concrete key data.
+                      The executor spreads each key over S sub-
+                      destinations (`key*S + salt`) and ⊕-folds the [K, S]
+                      partial back, so skewed keys stop serializing the
+                      scatter.  Static pins (`SegmentReduce.salt`, set by
+                      the planner from `PlanConfig.skew_salting`) take
+                      precedence; callers put the resolved dict in their
+                      compile-cache key, since the decision changes the
+                      traced computation.
     """
     bag_offsets: dict = field(default_factory=dict)
     bag_limits: dict = field(default_factory=dict)
@@ -173,9 +184,75 @@ class ExecContext:
     array_limits: dict = field(default_factory=dict)
     axis_overrides: dict = field(default_factory=dict)
     aligned: frozenset = frozenset()
+    salts: dict = field(default_factory=dict)
 
 
 _EMPTY_CTX = ExecContext()
+
+
+def salt_for_node(node, env, selector, skew_salting: str, *,
+                  nshards: int = 1, bag_limits=None) -> int:
+    """Run-time half of the hot-key salting decision for one group-by
+    node: probe the CONCRETE key column host-side and ask the selector's
+    cost model / cache for the salt factor (1 = do not salt).  Only fires
+    in "auto" mode on nodes without a static pin, and only for the probe-
+    able shape — a single key that IS a bag column (the word-count /
+    group-by form), reduced into a 1-D destination.  Everything else keeps
+    S=1: salting is an optimization, never a requirement."""
+    if not isinstance(node, P.SegmentReduce) or node.salt is not None \
+            or skew_salting != "auto":
+        return 1
+    if len(node.keys) != 1 or not isinstance(node.keys[0], Var):
+        return 1
+    dest = env.get(node.dest)
+    if dest is None or len(jnp.shape(dest)) != 1:
+        return 1
+    kv = node.keys[0].name
+    bag, col = None, 0
+    for a in node.space.axes:
+        if a.kind == "bag" and kv in a.vals:
+            bag, col = a.bag, a.vals.index(kv)
+            break
+    if bag is None or bag not in env:
+        return 1
+    bv = env[bag]
+    c = (bv if isinstance(bv, tuple) else (bv,))[col]
+    if isinstance(c, jax.core.Tracer):
+        return 1                  # under an outer trace: no concrete data
+    n = int(c.shape[0])
+    lim = (bag_limits or {}).get(bag)
+    if lim is not None:
+        n = min(n, int(lim))
+    if n == 0:
+        return 1
+    from .op_select import probe_hot_fraction
+    hot = probe_hot_fraction(np.asarray(c[:min(n, 4096)]))
+    dec = selector.choose_salt(n=n, k=int(jnp.shape(dest)[0]), op=node.op,
+                               nshards=nshards, hot_frac=hot)
+    return int(dec.backend.split(":", 1)[1]) \
+        if dec.backend.startswith("salt:") else 1
+
+
+def collect_salts(nodes, env, selector, skew_salting: str, *,
+                  nshards: int = 1, bag_limits=None) -> dict:
+    """dest → salt factor for every probe-decided group-by in the plan
+    (walks SeqLoop bodies and fused regions).  Callers thread the result
+    through ExecContext.salts AND their compile-cache key — the factor is
+    baked into the trace."""
+    out: dict = {}
+    def walk(ns):
+        for n in ns:
+            if isinstance(n, P.SeqLoop):
+                walk(n.body)
+            elif isinstance(n, (P.Fused, P.FusedRound)):
+                walk(n.parts)
+            else:
+                s = salt_for_node(n, env, selector, skew_salting,
+                                  nshards=nshards, bag_limits=bag_limits)
+                if s > 1:
+                    out[n.dest] = s
+    walk(nodes)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -377,6 +454,12 @@ class PlanExecutor:
                 env[node.dest] = self.run_node(node, env, ctx)
 
     def run_node(self, node, env, ctx: ExecContext = _EMPTY_CTX):
+        if isinstance(node, P.Rebalance):
+            # single device: one shard holds every row, blocks are balanced
+            # by construction — the round is the identity (the distributed
+            # executor runs the real size-exchange + all-to-all)
+            self.note(node, "rebalance:noop[single-device]")
+            return env[node.dest]
         if isinstance(node, P.DenseMap):
             res = self._exec_dense_map(node, env, ctx)
             if res is not None:
@@ -587,6 +670,37 @@ class PlanExecutor:
         for d_ in shape:
             n_rows *= d_
         backend = self._segment_backend(node, n_rows, dest)
+        salt_s, salt_src = self._segment_salt(node, ctx, dest)
+        if salt_s > 1:
+            # hot-key salting: spread every key over S sub-destinations —
+            # `key*S + salt` with salt = global row index mod S — reduce a
+            # [K·S] partial, then ⊕-fold the [K, S] view back to [K].  The
+            # fold over ALL S slots makes any salt assignment correct (⊕ is
+            # associative-commutative); the global row index keeps the
+            # assignment identical on one device and across shards.  Every
+            # backend takes the flattened-partial route here, including
+            # scatter — salting exists to break its duplicate-update
+            # serialization, and scattering into the [K·S] identity-filled
+            # partial is exactly how the chain length divides by S.
+            flat, num = self._ravel_keys([k.reshape(-1) for k in kk],
+                                         dest.shape, limit0=lim0)
+            if m is not None:
+                flat = jnp.where(m.reshape(-1), flat, num)
+            off = 0
+            lead = node.space.axes[0] if node.space.axes else None
+            if lead is not None and lead.kind == "bag":
+                off = ctx.bag_offsets.get(lead.bag, 0)
+            salt = (off + jnp.arange(flat.shape[0], dtype=jnp.int32)) % salt_s
+            salted = jnp.where(flat < num, flat * salt_s + salt,
+                               num * salt_s)
+            vflat = val.reshape(-1).astype(dest.dtype)
+            part = self._segment_flat(backend, salted, vflat,
+                                      num * salt_s, node.op)
+            part = REDUCE[node.op](part.reshape(num, salt_s), axis=1)
+            self.note(node, self.decisions.get(id(node), "")
+                      + f" salt={salt_s}x[{salt_src}]")
+            return COMBINE[node.op](
+                dest, part.reshape(dest.shape).astype(dest.dtype))
         if backend != "scatter":
             # flattened-segment backends (sort / onehot / pallas): ravel
             # the key tuple against the physical dims, route every dropped
@@ -622,10 +736,34 @@ class PlanExecutor:
         kk = [k.astype(jnp.uint32) for k in kk]
         return _scatter_op(dest.at[tuple(kk)], node.op)(val, mode="drop")
 
+    def _segment_salt(self, node: P.SegmentReduce, ctx, dest):
+        """Resolve the hot-key salt factor for this node: the static hint
+        (`node.salt` — user-set or planner-stamped from
+        `PlanConfig.skew_salting`) wins; otherwise the caller's run-time
+        probe result (`ctx.salts`).  Restricted to single-key 1-D
+        destinations — multi-key ravels already interleave destinations,
+        and the fold is defined on the flat [K·S] partial."""
+        if len(node.keys) != 1 or len(dest.shape) != 1:
+            return 1, None
+        if node.salt is not None:
+            return (int(node.salt), "hint") if node.salt > 1 else (1, None)
+        s = ctx.salts.get(node.dest)
+        if s is not None and int(s) > 1:
+            return int(s), "probe"
+        return 1, None
+
     def _segment_flat(self, backend: str, ids, vals, num: int, op: str):
         """[N]-flat segment-⊕ partial via the chosen backend.  `ids` ==
         `num` marks dropped rows; the partial's row i is the ⊕ of all
         vals whose id == i, with the ⊕ identity for empty segments."""
+        if backend == "scatter":
+            # scatter-⊕ into an identity-filled [num+1] partial (salted
+            # path only: unsalted scatter goes straight into the dest).
+            # Sentinel rows land in the discard row and are sliced off —
+            # dropped rows may carry non-finite values, but they only ever
+            # touch buf[num].
+            buf = jnp.full((num + 1,), identity(op, vals.dtype), vals.dtype)
+            return _scatter_op(buf.at[ids], op)(vals)[:num]
         if backend == "sort":
             # sort-based: jax.ops.segment_⊕ over sorted ids (the classic
             # GPU/TPU shape).  num+1 segments so the sentinel rows land in
@@ -1044,7 +1182,8 @@ class CompiledProgram:
                  use_kernels=False, infer_distributions=True,
                  dense_fastpath=True, op_select="cost",
                  autotune_cache=None, compile_mode="whole",
-                 donate=False, round_fusion=True):
+                 donate=False, round_fusion=True,
+                 skew_rebalance=True, skew_salting="auto"):
         self.program = prog
         self.target = target
         from .op_select import CACHE_FILE, OpSelector
@@ -1056,7 +1195,9 @@ class CompiledProgram:
                                  dense_fastpath=dense_fastpath,
                                  op_select=op_select,
                                  autotune_cache=autotune_cache,
-                                 round_fusion=round_fusion)
+                                 round_fusion=round_fusion,
+                                 skew_rebalance=skew_rebalance,
+                                 skew_salting=skew_salting)
         self.plan = plan_program(target, prog, self.config)
         from .dist_analysis import collect
         self.dists = collect(self.plan)   # array → Dist (pass-8 annotations)
@@ -1105,9 +1246,10 @@ class CompiledProgram:
 
     # -- public execution interface (distributed.py consumes this) --
     def execute(self, env: dict, *, bag_offsets=None, bag_limits=None,
-                array_limits=None, nodes=None) -> None:
+                array_limits=None, nodes=None, salts=None) -> None:
         ctx = ExecContext(bag_offsets or {}, bag_limits or {},
-                          array_limits=array_limits or {})
+                          array_limits=array_limits or {},
+                          salts=salts or {})
         self.executor.execute(self.plan if nodes is None else nodes, env, ctx)
 
     def prepare_env(self, inputs: dict) -> dict:
@@ -1169,14 +1311,20 @@ class CompiledProgram:
                    and not isinstance(v, int)}
         kept = {n: v for n, v in env.items()
                 if n not in static and n not in donated}
-        key = (sig, donate)
+        # run-time hot-key probe (skew salting): the resolved factors are
+        # part of the cache key — a skewed and a uniform key stream of the
+        # same shapes trace DIFFERENT programs
+        salts = collect_salts(self.plan, env, self.selector,
+                              self.config.skew_salting)
+        key = (sig, donate, tuple(sorted(salts.items())))
         ent = self._whole_cache.get(key)
         if ent is None:
             def traced(dnt, kpt, _static=dict(static)):
                 e = dict(_static)
                 e.update(dnt)
                 e.update(kpt)
-                self.executor.execute(self.plan, e)
+                self.executor.execute(self.plan, e,
+                                      ExecContext(salts=salts))
                 return {n: e[n] for n in self.program.outputs}
 
             fn = jax.jit(traced, donate_argnums=(0,) if donated else ())
@@ -1201,7 +1349,8 @@ class CompiledProgram:
             if out is not None:
                 return out
         env = self.prepare_env(inputs)
-        self.execute(env)
+        self.execute(env, salts=collect_salts(
+            self.plan, env, self.selector, self.config.skew_salting))
         return {n: env[n] for n in self.program.outputs}
 
     def __call__(self, **inputs):
@@ -1217,7 +1366,9 @@ def compile_program(fn_or_prog, *, restrictions=True,
                     autotune_cache=None,
                     compile_mode="whole",
                     donate=False,
-                    round_fusion=True) -> CompiledProgram:
+                    round_fusion=True,
+                    skew_rebalance=True,
+                    skew_salting="auto") -> CompiledProgram:
     """Front door: loop program → restrictions check (Def. 3.1) →
     comprehension translation (Fig. 2) → pass pipeline (passes.py) →
     executable physical plan.
@@ -1244,7 +1395,14 @@ def compile_program(fn_or_prog, *, restrictions=True,
     additionally donates mutated destinations and SeqLoop carries at the
     jit boundary — callers must then treat jax-array inputs as consumed.
     round_fusion=False disables pass 11 (FusedRound regions / on-device
-    distributed loops)."""
+    distributed loops).
+
+    skew_rebalance=False disables the explicit ONED_VAR→ONED_ROW rebalance
+    insertion (skewed arrays then stay variable-block, the pad+mask
+    fallback).  skew_salting picks the hot-key salting policy for
+    group-bys: "auto" (default) resolves per node from the run-time skew
+    probe + cost model, "off" pins S=1 everywhere, "force:<S>" salts every
+    eligible group-by with factor S (A/B tests and goldens)."""
     prog = fn_or_prog if isinstance(fn_or_prog, Program) \
         else fn_or_prog.program
     if restrictions:
@@ -1253,4 +1411,4 @@ def compile_program(fn_or_prog, *, restrictions=True,
     return CompiledProgram(prog, target, optimize_contractions, use_kernels,
                            infer_distributions, dense_fastpath, op_select,
                            autotune_cache, compile_mode, donate,
-                           round_fusion)
+                           round_fusion, skew_rebalance, skew_salting)

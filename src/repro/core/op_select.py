@@ -68,6 +68,10 @@ SEGMENT_CANDIDATES = {
 EXCHANGE_CANDIDATES = ("psum_scatter", "allreduce")
 CONTRACT_CANDIDATES = ("pallas-tiled", "unpack-einsum")
 
+# hot-key salting sub-destination factors (the S in key*S + salt); "none"
+# is always a candidate — it is the status quo
+SALT_FACTORS = (4, 8, 16)
+
 CACHE_FILE = ".repro_autotune.json"
 
 
@@ -105,16 +109,24 @@ _COSTS = {
     "cpu": dict(fixed=60.0, scatter_row=0.12, sort_row=0.05,
                 onehot_cell=0.002, pallas_cell=0.002, pallas_fixed=2e5,
                 coll_row=0.004, coll_fixed=400.0, dest_shard_fixed=1500.0,
-                tile_mxu=math.inf, einsum_cell=4e-5, unpack_cell=1.5e-3),
+                tile_mxu=math.inf, einsum_cell=4e-5, unpack_cell=1.5e-3,
+                dup_row=0.0, salt_fold=0.004),
     "tpu": dict(fixed=5.0, scatter_row=1.0, sort_row=0.01,
                 onehot_cell=2e-4, pallas_cell=1.2e-5, pallas_fixed=30.0,
                 coll_row=1e-4, coll_fixed=10.0, dest_shard_fixed=5.0,
-                tile_mxu=1.5e-5, einsum_cell=1.5e-5, unpack_cell=2e-4),
+                tile_mxu=1.5e-5, einsum_cell=1.5e-5, unpack_cell=2e-4,
+                dup_row=1.0, salt_fold=2e-4),
     "gpu": dict(fixed=10.0, scatter_row=0.05, sort_row=0.008,
                 onehot_cell=3e-4, pallas_cell=math.inf, pallas_fixed=math.inf,
                 coll_row=2e-4, coll_fixed=20.0, dest_shard_fixed=50.0,
-                tile_mxu=math.inf, einsum_cell=2e-5, unpack_cell=3e-4),
+                tile_mxu=math.inf, einsum_cell=2e-5, unpack_cell=3e-4,
+                dup_row=0.01, salt_fold=3e-4),
 }
+# dup_row: extra per-row cost when rows COLLIDE on one destination row —
+# hardware scatter serializes duplicate-key updates (severe on TPU, atomics
+# contend mildly on GPU, the CPU loop is sequential regardless, so 0: cost
+# mode never salts on CPU).  salt_fold: per-cell cost of the [K, S] ⊕-fold
+# that merges the salted sub-destinations back.
 
 
 def _segment_cost(c: dict, backend: str, n: int, k: int, d: int) -> float:
@@ -130,6 +142,28 @@ def _segment_cost(c: dict, backend: str, n: int, k: int, d: int) -> float:
     if backend == "pallas":
         return c["pallas_fixed"] + c["pallas_cell"] * nkd
     return math.inf
+
+
+def probe_hot_fraction(keys, cap: int = 4096) -> float:
+    """Run-time skew probe: the fraction of rows held by the most frequent
+    key in a host-side prefix sample of the key column (≤ `cap` rows — a
+    numpy unique over 4096 int32s is microseconds, paid once per distinct
+    (shapes, skew-bucket) signature because the resulting decision is part
+    of the compile-cache key).  A prefix sample is exact for the
+    distributions that matter here: a hot key that holds ≥ 1/8 of a
+    uniformly-ordered stream holds ≈ the same share of any prefix."""
+    import numpy as np
+    a = np.asarray(keys)[:cap].reshape(-1)
+    if a.size == 0:
+        return 0.0
+    _, counts = np.unique(a, return_counts=True)
+    return float(counts.max()) / float(a.size)
+
+
+def _hot_bucket(hot_frac: float) -> int:
+    """Skew bucket for the salt shape class: eighths of the stream held by
+    the hottest key (0 = uniform … 8 = single-key)."""
+    return max(0, min(8, int(hot_frac * 8.0 + 0.5)))
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +352,45 @@ class OpSelector:
             return Decision(best, "autotune", key)
         c = self._costs()
         cost = {b: _segment_cost(c, b, n, k, max(1, d)) for b in cands}
+        best = min(cost, key=cost.get)
+        return Decision(best, "cost", key)
+
+    # ---- hot-key salting (skew-aware group-by, DESIGN.md §6) ----
+    def salt_class(self, n: int, k: int, op: str, nshards: int,
+                   hot_frac: float) -> str:
+        return (f"salt|{op}|n{_bucket(n)}|k{_bucket(k)}|p{nshards}"
+                f"|h{_hot_bucket(hot_frac)}")
+
+    def choose_salt(self, *, n: int, k: int, op: str, nshards: int = 1,
+                    hot_frac: float = 0.0) -> Decision:
+        """Should this group-by salt its hot keys — spread each key over S
+        sub-destinations (`key*S + salt`) and ⊕-fold the [K, S] partial
+        back — and at which S?  Salting trades a k·S fold (and k·S partial
+        memory) against the duplicate-update serialization a skewed key
+        column induces in hardware scatters: a key holding fraction h of n
+        rows forces h·n colliding updates on one destination row, and
+        salting divides that chain by S.  The class is keyed on the PROBED
+        skew bucket (`probe_hot_fraction`), so a cache entry pinned for a
+        hot class never fires on uniform data.  The CPU cost row has
+        dup_row=0 (the scatter loop is sequential either way), so cost
+        mode only ever salts where collisions actually serialize; tests
+        and A/B runs pin decisions via `PlanConfig.skew_salting`
+        ("force:<S>") or the `SegmentReduce.salt` static hint instead."""
+        key = self.salt_class(n, k, op, nshards, hot_frac)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return Decision(hit["backend"], "cache", key)
+        # skew guard: a key is only "hot" when it holds several times its
+        # fair 1/K share — below that, the collision chain is the inherent
+        # n/K every group-by pays, and salting can only add fold cost
+        if hot_frac * max(1, k) < 4.0:
+            return Decision("none", "cost", key)
+        c = self._costs()
+        # only EXCESS collisions beyond the balanced chain serialize extra
+        dup = c["dup_row"] * max(0.0, hot_frac - 1.0 / max(1, k)) * n
+        cost = {"none": dup}
+        for s in SALT_FACTORS:
+            cost[f"salt:{s}"] = c["fixed"] + dup / s + c["salt_fold"] * k * s
         best = min(cost, key=cost.get)
         return Decision(best, "cost", key)
 

@@ -85,6 +85,13 @@ class PlanConfig:
     op_select: str = "cost"              # "cost" | "autotune" | "force:<b>"
     autotune_cache: str = ".repro_autotune.json"   # on-disk decision cache
     round_fusion: bool = True            # False = one shard_map per node
+    skew_rebalance: bool = True          # False = never pin ONED_VAR up /
+    #                                      insert Rebalance rounds (fallback:
+    #                                      arrays keep variable blocks)
+    skew_salting: str = "auto"           # hot-key salting for group-bys:
+    #                                      "auto" (cost model + runtime
+    #                                      probe) | "off" | "force:<S>"
+    #                                      (static hint: S sub-keys per key)
 
 
 # ---------------------------------------------------------------------------
@@ -667,8 +674,42 @@ def pass_fuse_updates(nodes: list, prog, config) -> list:
 
 def pass_distribution(nodes: list, prog, config) -> list:
     from .dist_analysis import analyze
-    analyze(nodes, prog, config)
+    rb: dict = {}
+    analyze(nodes, prog, config, rebalance_out=rb)
+    inserted = sorted(a for a, d in rb.items() if d == "inserted")
+    if inserted and getattr(config, "skew_rebalance", True):
+        # materialize the analysis' "insert an explicit rebalance"
+        # decisions as plan nodes (one per pinned array, placed right
+        # after its last producer), then re-annotate so the new nodes
+        # carry shardings like every other leaf
+        _insert_rebalances(nodes, set(inserted))
+        analyze(nodes, prog, config)
     return nodes
+
+
+def _insert_rebalances(nodes: list, arrays: set) -> None:
+    """Insert a `P.Rebalance` after the LAST node writing each pinned array
+    (in the block — top level or SeqLoop body — where that write lives), so
+    every later reader sees balanced ONED_ROW blocks."""
+
+    def last_writer(block):
+        found = {}
+        for i, n in enumerate(block):
+            if isinstance(n, P.SeqLoop):
+                last_writer(n.body)
+                continue
+            for d in P.dests_of(n):
+                if d in arrays:
+                    found[d] = (i, n)
+        # insert in reverse index order so earlier positions stay valid
+        for name, (i, n) in sorted(found.items(),
+                                   key=lambda kv: -kv[1][0]):
+            space = getattr(n, "space", P.IterSpace(()))
+            block.insert(i + 1, P.Rebalance(None, space,
+                                            frozenset({name}), name))
+            arrays.discard(name)
+
+    last_writer(nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -692,6 +733,17 @@ def pass_select_backend(nodes: list, prog, config) -> list:
         forced = "pallas"
     elif config.op_select.startswith("force:"):
         forced = config.op_select.split(":", 1)[1]
+    # hot-key salting policy → static pin.  "auto" leaves salt=None: the
+    # run-time probe (lower.collect_salts) decides per call from the
+    # concrete key data.  "off" pins S=1 (disables probe and salting);
+    # "force:<S>" pins S on every eligible node (the executor still
+    # ignores the pin where salting is undefined: multi-key / non-1-D).
+    salting = getattr(config, "skew_salting", "auto")
+    salt_pin = None
+    if salting == "off":
+        salt_pin = 1
+    elif salting.startswith("force:"):
+        salt_pin = int(salting.split(":", 1)[1])
 
     def fix(n):
         if isinstance(n, P.Fused):
@@ -706,6 +758,8 @@ def pass_select_backend(nodes: list, prog, config) -> list:
                 n.backend = forced
             else:
                 n.backend = "auto"
+            if salt_pin is not None:
+                n.salt = salt_pin
             return n
         if isinstance(n, P.TiledMatmul):
             fix(n.contract)      # the dense-lhs resolution shares the pin
@@ -739,6 +793,8 @@ def _fusable_member(n) -> bool:
     from .dist_analysis import leading_key_var, round_axis
     if isinstance(n, P.SeqLoop):
         return False                     # loops fuse their own bodies
+    if isinstance(n, P.Rebalance):
+        return True                      # one collective sub-round
     if _scalar_member(n):
         return True
     if isinstance(n, P.Fused):

@@ -22,6 +22,11 @@ Operator catalogue (paper rule in brackets):
   SeqLoop         sequential while over the mutated-variable carry   [15f]
   Fused           consecutive reductions sharing one iteration space,
                   merged so distributed execution runs one collective round
+  Rebalance       explicit redistribution restoring balanced ONED_ROW row
+                  blocks for an ONED_VAR (variable-block) array — inserted
+                  by the distribution analysis' _rebalance fixed point
+                  (HPAT idiom) when a consumer needs equal blocks; a no-op
+                  on a single device
 
 Expression trees inside nodes contain `Gather` — the physical read operator
 (clipped gather + inRange mask); `broadcast_ok` marks reads the
@@ -199,6 +204,9 @@ class SegmentReduce:
     backend: str = "scatter"     # "auto" | one of `candidates`
     candidates: tuple[str, ...] = ("scatter",)
     shardings: Optional[dict] = None   # dist_analysis annotation
+    salt: Optional[int] = None   # hot-key salting static hint: spread each
+    # key over S sub-destinations (key*S + salt), fold salts after; None =
+    # let op_select.choose_salt decide per shape class / runtime probe
 
     def describe(self) -> str:
         b = self.backend if self.backend != "auto" else \
@@ -346,6 +354,32 @@ class SeqLoop:
 
     def describe(self) -> str:
         return f"SeqLoop(carry={','.join(self.carry)})"
+
+
+@dataclass
+class Rebalance:
+    """Explicit redistribution of one ONED_VAR array back to balanced
+    ONED_ROW row blocks (HPAT's rebalance round).  Inserted by
+    pass_distribution when the analysis' `_rebalance` fixed point pins the
+    array up from ONED_VAR (dist_analysis.analyze rebalance_out =
+    "inserted").  Distributed execution is a cached shard_map round built
+    from the existing exchange machinery: per-shard live-row counts are
+    exchanged with a one-hot `psum` (size exchange), exclusive-cumsummed
+    into global offsets, and rows are scattered to their balanced global
+    positions then redistributed with `psum_scatter` (each target position
+    receives exactly one addend, so the composition is an exact all-to-all,
+    not an approximate reduction).  On canonical front-packed layouts the
+    round is value-identity; the single-device executor runs it as a
+    no-op.  Results never change — only the placement contract."""
+    stmt: Any
+    space: IterSpace
+    reads: frozenset
+    dest: str                          # the array being rebalanced in place
+    shardings: Optional[dict] = None   # dist_analysis annotation
+
+    def describe(self) -> str:
+        return (f"Rebalance({self.dest}) "
+                f"(size exchange + all-to-all, ONED_VAR→ONED_ROW)")
 
 
 @dataclass

@@ -39,8 +39,12 @@ def test_matrix_factorization_factors_shard():
 
 def test_kmeans_per_point_arrays_shard():
     d = dists("kmeans_step")
-    for name in ("D", "MinD", "Cl"):      # bag-joined dense writes
-        assert d[name] == Dist.ONED_ROW, (name, d[name])
+    for name in ("D", "MinD", "Cl"):      # bag-joined dense writes: the
+        # live row count per shard is data-dependent (one row per bag
+        # element), so they carry variable blocks rather than balanced ones
+        assert d[name] == Dist.ONED_VAR, (name, d[name])
+    for name in ("SX", "SY", "CN"):       # computed-key reduces stay
+        assert d[name] == Dist.ONED_ROW   # balanced over the key space
 
 
 def test_strided_store_forces_rep():
@@ -91,3 +95,90 @@ def test_annotations_cover_every_dense_operand():
         assert n.shardings, f"missing shardings on {n.describe()}"
         assert n.dest in n.shardings      # destination always listed first
         assert next(iter(n.shardings)) == n.dest
+
+
+# ---------------------------------------------------------------------------
+# ONED_VAR and the _rebalance re-run (skew-aware distribution)
+# ---------------------------------------------------------------------------
+
+def _rebalance_dests(nodes):
+    from repro.core import plan as P
+
+    def walk(ns):
+        for n in ns:
+            if isinstance(n, P.SeqLoop):
+                yield from walk(n.body)
+            elif isinstance(n, (P.Fused, P.FusedRound)):
+                yield from walk(n.parts)
+            elif isinstance(n, P.Rebalance):
+                yield n.dest
+    return list(walk(nodes))
+
+
+def test_bag_derived_store_infers_oned_var():
+    from repro.core import bag
+
+    @loop_program
+    def bag_store(V: bag[1], A: vector):
+        for i, v in items(V):
+            A[i] = v * 2.0
+
+    d = compile_program(bag_store).dists
+    # one row per bag element: the live block length is data-dependent
+    assert d["A"] == Dist.ONED_VAR
+
+
+def test_rebalance_inserted_for_loop_reader():
+    from repro.core import bag, scalar
+
+    @loop_program
+    def loop_reader(V: bag[1], A: vector, s: scalar, steps: scalar):
+        for i, v in items(V):
+            A[i] = v * 2.0
+        while steps < 3.0:
+            steps += 1.0
+            for i, v in items(V):
+                s += A[i]
+
+    cp = compile_program(loop_reader)
+    # A is bag-derived (ONED_VAR producer) but re-read inside a SeqLoop
+    # body: the _rebalance re-run pins it up to ONED_ROW and the planner
+    # inserts an explicit Rebalance round after the producer
+    assert cp.dists["A"] == Dist.ONED_ROW
+    assert _rebalance_dests(cp.plan) == ["A"]
+
+
+def test_rebalance_elided_for_filtered_store():
+    from repro.core import bag
+
+    @loop_program
+    def filtered(V: bag[1], W: vector):
+        for i, v in items(V):
+            if v > 0.0:
+                W[i] = v
+
+    cp = compile_program(filtered)
+    # nothing downstream needs balanced blocks: W keeps variable-length
+    # live blocks (pad+mask covers the filtered rows) and no rebalance
+    # round is spent on it
+    assert cp.dists["W"] == Dist.ONED_VAR
+    assert _rebalance_dests(cp.plan) == []
+
+
+def test_skew_rebalance_off_keeps_variable_blocks():
+    from repro.core import bag, scalar
+
+    @loop_program
+    def loop_reader2(V: bag[1], A: vector, s: scalar, steps: scalar):
+        for i, v in items(V):
+            A[i] = v * 2.0
+        while steps < 3.0:
+            steps += 1.0
+            for i, v in items(V):
+                s += A[i]
+
+    cp = compile_program(loop_reader2, skew_rebalance=False)
+    # the guard-table fallback: no promotion, no Rebalance nodes — the
+    # loop reads fall back to the all_gather path on variable blocks
+    assert cp.dists["A"] == Dist.ONED_VAR
+    assert _rebalance_dests(cp.plan) == []
