@@ -27,6 +27,10 @@ Sections:
             host-device mesh; also a FRESH-process section; emits
             BENCH_skew.json; --check fails when the Zipf stream is >20%
             slower than uniform on any program (wired into CI)
+  [serve]   PlanServer throughput on the mixed pagerank + group_by +
+            kmeans workload at 1/8/64 simulated clients (DESIGN.md §10);
+            emits BENCH_serve.json; --check fails when 64-client
+            throughput is < 3x 1-client (wired into CI)
 """
 from __future__ import annotations
 
@@ -98,11 +102,14 @@ def main() -> None:
     ap.add_argument("--skew-json-out", default=os.path.join(
         _REPO, "BENCH_skew.json"),
         help="skew artifact path ('' disables)")
+    ap.add_argument("--serve-json-out", default=os.path.join(
+        _REPO, "BENCH_serve.json"),
+        help="serve artifact path ('' disables)")
     args = ap.parse_args()
     sections = args.sections.split(",")
-    if args.check and not {"fig3", "dist", "skew"} & set(sections):
-        ap.error("--check gates fig3, dist, and/or skew: include one in "
-                 "--sections")
+    if args.check and not {"fig3", "dist", "skew", "serve"} & set(sections):
+        ap.error("--check gates fig3, dist, skew, and/or serve: include "
+                 "one in --sections")
 
     if {"dist", "skew"} & set(sections):
         if len(sections) != 1:
@@ -317,6 +324,20 @@ def main() -> None:
                 json.dump(skew_bench.to_json(rows, args.scale), f, indent=1)
             print(f"[skew] wrote {args.skew_json_out}")
         if args.check and skew_bench.check_rows(rows, args.scale):
+            check_failed = True
+
+    if "serve" in sections:
+        from benchmarks import serve_bench
+        print("[serve] PlanServer, mixed pagerank+group_by+kmeans "
+              "workload, closed-loop clients (DESIGN.md §10)")
+        rows = serve_bench.rows()
+        serve_bench.print_rows(rows)
+        print()
+        if args.serve_json_out:
+            with open(args.serve_json_out, "w") as f:
+                json.dump(serve_bench.to_json(rows), f, indent=1)
+            print(f"[serve] wrote {args.serve_json_out}")
+        if args.check and serve_bench.check_rows(rows):
             check_failed = True
 
     if check_failed:

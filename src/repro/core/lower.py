@@ -1353,6 +1353,120 @@ class CompiledProgram:
             self.plan, env, self.selector, self.config.skew_salting))
         return {n: env[n] for n in self.program.outputs}
 
+    # ---- batchable entry (serving layer, DESIGN.md §10) ----
+    # The PlanServer (serve/plans.py) coalesces concurrent invocations of
+    # one program into a single vmapped whole-program XLA call.  These
+    # three hooks are its contract: a HOST-SIDE mirror of prepare_env (so
+    # requests canonicalize without touching the device), the signature
+    # key that doubles as the shape-bucketing function, and the batched
+    # call itself — the same traced plan, vmapped over a leading request
+    # axis and cached in the SAME whole-program cache.
+
+    def canonical_inputs(self, inputs: dict) -> dict:
+        """Numpy mirror of prepare_env: same dtype coercions, no device
+        transfer.  The serving layer stacks many of these host-side and
+        ships ONE buffer per bucket.  §5 packed inputs are rejected —
+        they execute eagerly and cannot batch."""
+        from .tiles import TiledMatrix
+        out = {}
+        for name, t in self.program.params.items():
+            v = inputs[name]
+            if isinstance(v, TiledMatrix):
+                raise ValueError(
+                    f"param '{name}': packed (TiledMatrix) inputs cannot "
+                    "take the batched serving path")
+            if t.kind == "dim":
+                out[name] = int(v)
+            elif t.kind == "bag":
+                cols = v if isinstance(v, tuple) else (v,)
+                out[name] = tuple(
+                    np.asarray(c, jax.dtypes.canonicalize_dtype(
+                        np.asarray(c).dtype)) for c in cols)
+            elif t.kind in ("vector", "matrix", "map"):
+                out[name] = np.asarray(
+                    v, np.float32 if t.dtype == "float" else np.int32)
+            else:
+                a = np.asarray(v)
+                out[name] = np.asarray(
+                    a, jax.dtypes.canonicalize_dtype(a.dtype))
+        return out
+
+    def entry_signature(self, cinputs: dict) -> tuple:
+        """The whole-program compile-cache key of one canonicalized
+        request: static dims BY VALUE, arrays by shape+dtype — exactly
+        `_signature`, computed host-side.  This IS the serving layer's
+        bucketing function: requests whose signatures agree after bag/row
+        padding share one batched computation."""
+        sig = []
+        for name, t in self.program.params.items():
+            v = cinputs[name]
+            if t.kind == "dim":
+                sig.append((name, "dim", int(v)))
+            elif t.kind == "bag":
+                sig.append((name, "bag", tuple(
+                    (tuple(c.shape), str(c.dtype)) for c in v)))
+            else:
+                sig.append((name, t.kind, tuple(np.shape(v)),
+                            str(np.asarray(v).dtype)))
+        return tuple(sig)
+
+    @property
+    def bag_row_aligned(self) -> dict:
+        """array → bag for dense params whose dim-0 rides a bag's row
+        count (plan.bag_row_arrays): the arrays a shape bucket must pad in
+        lockstep with that bag, under a matching `array_limits` mask."""
+        if not hasattr(self, "_bag_row_aligned"):
+            self._bag_row_aligned = P.bag_row_arrays(self.plan)
+        return self._bag_row_aligned
+
+    def batched_call(self, key, static: dict, arrays: dict, lengths: dict,
+                     limit_bags=(), limit_arrays=()):
+        """Run the whole-program trace vmapped over a leading request
+        axis: `arrays` maps every non-dim param to a [B, ...]-stacked
+        value (bags as tuples of [B, N] columns), `lengths` maps each
+        padded bag/bag-aligned array to its [B] logical row counts —
+        threaded per lane through ExecContext.{bag,array}_limits so pad
+        rows can never change a result (the same §3.4 machinery the
+        distributed pad+mask path uses).  `key` is the caller's padded
+        bucket signature (it must determine shapes, B, and the limit
+        sets); entries live in the SAME `_whole_cache` as single-request
+        signatures and count toward trace_count/cache_hits.  Mutated
+        destinations are donated — callers pass freshly device_put
+        buffers and must not reuse them.  Hot-key salting stays off on
+        this path (keys are tracers under vmap; the probe needs concrete
+        data).  Raises on trace failure — the serving layer falls back to
+        sequential run() per request."""
+        ck = ("batched", key)
+        donated = {n: v for n, v in arrays.items()
+                   if n in self._donate_names}
+        kept = {n: v for n, v in arrays.items() if n not in donated}
+        ent = self._whole_cache.get(ck)
+        if ent is None:
+            outs = tuple(self.program.outputs)
+            lb, la = tuple(limit_bags), tuple(limit_arrays)
+
+            def traced(dnt, kpt, lens, _static=dict(static)):
+                def one(d, k_, l):
+                    e = dict(_static)
+                    e.update(d)
+                    e.update(k_)
+                    ctx = ExecContext(
+                        bag_limits={n: l[n] for n in lb},
+                        array_limits={n: l[n] for n in la})
+                    self.executor.execute(self.plan, e, ctx)
+                    return {n: e[n] for n in outs}
+                return jax.vmap(one)(dnt, kpt, lens)
+
+            fn = jax.jit(traced, donate_argnums=(0,) if donated else ())
+            out = fn(donated, kept, lengths)   # traces the batch once
+            self.trace_count += 1
+            self._whole_cache[ck] = (fn, dict(self.executor.decisions))
+            return out
+        fn, notes = ent
+        self.cache_hits += 1
+        self.executor.decisions.update(notes)
+        return fn(donated, kept, lengths)
+
     def __call__(self, **inputs):
         return self.run(inputs)
 

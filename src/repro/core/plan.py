@@ -54,8 +54,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
-from .comprehension import pretty
-from .loop_ast import Expr
+from .comprehension import Get, pretty
+from .loop_ast import Expr, Var
 
 
 # ---------------------------------------------------------------------------
@@ -460,6 +460,80 @@ def is_reduce(node: PlanNode) -> bool:
     return isinstance(node, REDUCE_NODES) or (
         isinstance(node, Fused)
         and all(isinstance(p, REDUCE_NODES) for p in node.parts))
+
+
+# ---------------------------------------------------------------------------
+# bag-row alignment (batchable-entry hook, serving layer — DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _walk_exprs(e, fn):
+    if e is None:
+        return
+    fn(e)
+    for attr in ("lhs", "rhs", "e"):
+        if hasattr(e, attr):
+            _walk_exprs(getattr(e, attr), fn)
+    for attr in ("args", "idxs"):
+        if hasattr(e, attr):
+            for a in getattr(e, attr):
+                _walk_exprs(a, fn)
+
+
+def bag_row_arrays(plan) -> dict:
+    """array name → bag name for every dense array whose dim-0 rides a
+    bag's ROW axis: somewhere in the plan the array is read with a bag
+    AXIS var (the `items()` index) as its leading index, or stored with a
+    bag axis var as its leading key axis.  Such an array's dim-0 extent is
+    the bag's row count by construction, so a caller padding the bag's
+    rows (the serving layer's shape buckets, DESIGN.md §10) must pad the
+    array's dim-0 in lockstep and thread a matching `array_limits` entry.
+    Arrays whose leading index is a range var or a computed expression are
+    NOT included — their dim-0 is pinned by a static dim, never the bag
+    length.  An array aligned with two different bags is dropped (no
+    single pad length is correct for it)."""
+    out: dict = {}
+    dropped: set = set()
+
+    def note(arr: str, bag: str):
+        if out.setdefault(arr, bag) != bag:
+            dropped.add(arr)
+
+    def visit(nodes):
+        for node in nodes:
+            if isinstance(node, SeqLoop):
+                visit(node.body)
+                continue
+            if isinstance(node, (Fused, FusedRound)):
+                visit(node.parts)
+                continue
+            space = getattr(node, "space", None)
+            if space is None:
+                continue
+            bagvars = {a.var: a.bag for a in space.axes if a.kind == "bag"}
+            if not bagvars:
+                continue
+
+            def read(e, _bv=bagvars):
+                if isinstance(e, (Gather, Get)) and e.idxs:
+                    i0 = e.idxs[0]
+                    if isinstance(i0, Var) and i0.name in _bv:
+                        note(e.array, _bv[i0.name])
+
+            for attr in ("value", "cond", "bool_any"):
+                _walk_exprs(getattr(node, attr, None), read)
+            for k in getattr(node, "keys", ()) or ():
+                _walk_exprs(k, read)
+            for c in space.conds:
+                _walk_exprs(c, read)
+            key_axes = getattr(node, "key_axes", None)
+            if key_axes and key_axes[0] in bagvars:
+                note(node.dest, bagvars[key_axes[0]])
+            if isinstance(node, EinsumContract) and node.fallback is not None:
+                visit([node.fallback])
+            elif isinstance(node, TiledMatmul):
+                visit([node.contract])
+    visit(plan)
+    return {a: b for a, b in out.items() if a not in dropped}
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,5 @@
+from .plans import PlanServer, PlanTicket
 from .step import make_decode_step, make_prefill_step
 
-__all__ = ["make_prefill_step", "make_decode_step"]
+__all__ = ["PlanServer", "PlanTicket", "make_prefill_step",
+           "make_decode_step"]

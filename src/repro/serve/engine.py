@@ -41,6 +41,7 @@ class ServeEngine:
         self.pos = np.zeros(slots, np.int32)
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
+        self._next_rid = 0
         self._decode = jax.jit(self._decode_fn)
         self._prefill_one = jax.jit(self._prefill_fn,
                                     static_argnames=("plen",))
@@ -62,8 +63,12 @@ class ServeEngine:
 
     # ---- public API ----
     def submit(self, prompt: np.ndarray, max_new: int, rid: int | None = None):
-        r = Request(rid if rid is not None else len(self.queue), prompt,
-                    max_new)
+        # rid defaults to a monotonic counter: `len(self.queue)` would
+        # recycle ids once the queue drains, aliasing distinct requests.
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        r = Request(rid, prompt, max_new)
         self.queue.append(r)
         return r
 

@@ -1,0 +1,552 @@
+"""Multi-tenant plan serving: shape-bucketed batching of concurrent
+CompiledProgram invocations (DESIGN.md §10).
+
+PR 5 made a single caller fast — one cached XLA dispatch per run().  This
+layer makes MANY callers fast: a request queue admits concurrent
+invocations of registered programs, buckets them by the whole-program
+compile-cache signature (static dims by value, shapes, dtypes — PR 5's
+keying IS the bucketing function), pads ragged same-program requests up to
+the bucket shape, and coalesces each bucket into ONE vmapped whole-program
+XLA call (CompiledProgram.batched_call, the batchable-entry hook in
+lower.py).  Padding is semantics-free: padded bag rows and padded
+bag-aligned array rows carry per-lane `bag_limits`/`array_limits` masks —
+the same §3.4 pad+mask machinery the distributed executor trusts — so a
+padded request returns bit-identical results to a solo run().
+
+Scheduling is deterministic and clock-injected: a bucket flushes when it
+reaches `max_batch` requests or when its oldest request has waited
+`flush_ms` (the straggler timeout).  `pump()` advances the server one
+scheduling step against the injected clock — tests drive it with a fake
+clock and scripted arrivals, production drives it from a background thread
+(`start()`) or any event loop.  Host→device transfer of the next ready
+bucket is overlapped with in-flight compute: the stacked arrays of bucket
+k+1 are `jax.device_put` while bucket k's donated computation runs, before
+its outputs are materialized.
+
+Observability mirrors explain(): `stats()` returns the counters (per-bucket
+queue depth, batch occupancy, padded-row fraction, p50/p99 latency,
+requests/sec, batch-signature compile-cache hits/misses) and
+`explain_serving()` renders the golden-testable text form.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+import jax
+
+
+def _bucket_len(n: int, floor: int) -> int:
+    """Bucket edge for a row count: next power of two, at least `floor`.
+    Ragged same-program requests round up to a shared edge so they share
+    one traced batch computation instead of one signature each."""
+    L = max(int(floor), 1)
+    while L < n:
+        L *= 2
+    return L
+
+
+def _pad0(a: np.ndarray, L: int) -> np.ndarray:
+    if a.shape[0] == L:
+        return a
+    pad = np.zeros((L - a.shape[0],) + a.shape[1:], a.dtype)
+    return np.concatenate([a, pad])
+
+
+def _pct(xs, q):
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(q * (len(s) - 1))))]
+
+
+class PlanTicket:
+    """One admitted invocation: resolves to the program's output dict
+    (numpy, sliced back to the request's own shapes), or to cancelled /
+    failed.  `result()` blocks (real-clock servers run a pump thread);
+    deterministic tests drain() the server instead and read `output`."""
+
+    __slots__ = ("rid", "program", "cin", "bucket", "t_submit", "state",
+                 "output", "error", "_event", "_completions")
+
+    def __init__(self, rid, program, cin, bucket, t_submit):
+        self.rid = rid
+        self.program = program
+        self.cin = cin                 # canonicalized inputs (numpy)
+        self.bucket = bucket
+        self.t_submit = t_submit
+        self.state = "queued"
+        self.output = None
+        self.error = None
+        self._event = threading.Event()
+        self._completions = 0          # must stay ≤ 1 (no duplicate resolve)
+
+    def done(self) -> bool:
+        return self.state != "queued"
+
+    def result(self, timeout=None) -> dict:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still queued")
+        if self.state == "cancelled":
+            raise RuntimeError(f"request {self.rid} was cancelled")
+        if self.state == "failed":
+            raise self.error
+        return self.output
+
+    def _resolve(self, state, output=None, error=None):
+        self._completions += 1
+        assert self._completions == 1, \
+            f"request {self.rid} resolved twice ({self.state} -> {state})"
+        self.state = state
+        self.output = output
+        self.error = error
+        self._event.set()
+
+
+class _Bucket:
+    """One shape class of one program: the queue plus its counters."""
+
+    __slots__ = ("key", "cp", "program", "label", "static", "bag_pads",
+                 "arr_pads", "limit_bags", "limit_arrays", "tickets",
+                 "flushes", "reqs", "traced", "hits", "real_lanes", "lanes",
+                 "pad_rows", "bag_rows")
+
+    def __init__(self, key, cp, program, label, static, bag_pads, arr_pads):
+        self.key = key
+        self.cp = cp
+        self.program = program
+        self.label = label
+        self.static = static               # dim name → value
+        self.bag_pads = bag_pads           # bag name → padded row count
+        self.arr_pads = arr_pads           # array name → padded dim-0
+        self.limit_bags = tuple(sorted(bag_pads))
+        self.limit_arrays = tuple(sorted(arr_pads))
+        self.tickets: deque = deque()
+        self.flushes = 0
+        self.reqs = 0
+        self.traced = 0
+        self.hits = 0
+        self.real_lanes = 0                # requests actually served
+        self.lanes = 0                     # vmap lanes dispatched (≥ real)
+        self.pad_rows = 0                  # padded bag rows
+        self.bag_rows = 0                  # total bag rows dispatched
+
+    def occ(self) -> float:
+        return 100.0 * self.real_lanes / self.lanes if self.lanes else 0.0
+
+    def padf(self) -> float:
+        return 100.0 * self.pad_rows / self.bag_rows if self.bag_rows \
+            else 0.0
+
+
+class PlanServer:
+    """Shared serving engine for compiled loop programs.
+
+      server = PlanServer({"pagerank": cp_pr, "group_by": cp_gb})
+      server.start()                      # background pump thread
+      t = server.submit("group_by", dict(S=(k, v), C=np.zeros(10)))
+      out = t.result(timeout=5.0)         # numpy output dict
+
+    Deterministic mode (tests): pass `clock=fake_clock`, never start a
+    thread, and call `pump()` / `drain()` explicitly — every scheduling
+    decision reads the injected clock, so scripted arrival schedules
+    replay exactly.
+
+    `max_batch` caps requests per flush; `flush_ms` bounds how long a
+    straggler waits for company; `bucket_floor` is the smallest bag bucket
+    edge (row counts round up to powers of two from there);
+    `batch_round=True` also rounds the LANE count up to a power of two
+    (replicating the first request into dummy lanes, outputs dropped) so
+    the compile cache holds O(log max_batch) entries per bucket instead of
+    one per distinct batch size."""
+
+    def __init__(self, programs: dict, *, max_batch: int = 8,
+                 flush_ms: float = 2.0, bucket_floor: int = 8,
+                 batch_round: bool = True, clock=None, prefetch: bool = True,
+                 sequential_fallback: bool = True):
+        self._programs = dict(programs)
+        self.max_batch = int(max_batch)
+        self.flush_s = float(flush_ms) / 1e3
+        self.bucket_floor = int(bucket_floor)
+        self.batch_round = bool(batch_round)
+        self.prefetch = bool(prefetch)
+        self.sequential_fallback = bool(sequential_fallback)
+        self._clock = clock if clock is not None else time.monotonic
+        self._lock = threading.RLock()
+        self._buckets: dict = {}           # key → _Bucket (insertion order)
+        self._staged: dict = {}            # key → (rids, Bp, device pytree)
+        self._next_rid = 0
+        self._t0 = None                    # first submit time
+        self._t_last = None                # last completion time
+        self._lat = deque(maxlen=8192)     # completion latencies (seconds)
+        self.admitted = 0
+        self.completed = 0
+        self.cancelled = 0
+        self.failed = 0
+        self.seq_fallbacks = 0
+        self._thread = None
+        self._stop = None
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def submit(self, program: str, inputs: dict) -> PlanTicket:
+        """Admit one invocation: canonicalize host-side, bucket by the
+        padded compile-cache signature, enqueue.  Never blocks and never
+        touches the device."""
+        cp = self._programs[program]
+        cin = cp.canonical_inputs(inputs)
+        with self._lock:
+            b = self._bucket_for(program, cp, cin)
+            now = self._clock()
+            if self._t0 is None:
+                self._t0 = now
+            t = PlanTicket(self._next_rid, program, cin, b, now)
+            self._next_rid += 1
+            b.tickets.append(t)
+            self.admitted += 1
+            return t
+
+    def cancel(self, ticket: PlanTicket) -> bool:
+        """Withdraw a still-queued request.  False once it flushed."""
+        with self._lock:
+            if ticket.done():
+                return False
+            try:
+                ticket.bucket.tickets.remove(ticket)
+            except ValueError:
+                return False
+            self._staged.pop(ticket.bucket.key, None)
+            ticket._resolve("cancelled")
+            self.cancelled += 1
+            return True
+
+    def _bucket_for(self, program, cp, cin) -> _Bucket:
+        params = cp.program.params
+        aligned = cp.bag_row_aligned
+        bag_pads, bag_lens = {}, {}
+        for name, t in params.items():
+            if t.kind == "bag":
+                n = int(cin[name][0].shape[0])
+                bag_lens[name] = n
+                bag_pads[name] = _bucket_len(n, self.bucket_floor)
+        arr_pads = {}
+        for arr, bag in aligned.items():
+            v = cin.get(arr)
+            if bag in bag_lens and isinstance(v, np.ndarray) and v.ndim \
+                    and v.shape[0] == bag_lens[bag]:
+                arr_pads[arr] = bag_pads[bag]
+        static, psig = {}, []
+        for name, t in params.items():
+            v = cin[name]
+            if t.kind == "dim":
+                static[name] = int(v)
+                psig.append((name, "dim", int(v)))
+            elif t.kind == "bag":
+                L = bag_pads[name]
+                psig.append((name, "bag", tuple(
+                    ((L,) + tuple(c.shape[1:]), str(c.dtype)) for c in v)))
+            else:
+                shp = tuple(np.shape(v))
+                if name in arr_pads:
+                    shp = (arr_pads[name],) + shp[1:]
+                psig.append((name, t.kind, shp, str(np.asarray(v).dtype)))
+        key = (program, tuple(psig), frozenset(arr_pads))
+        b = self._buckets.get(key)
+        if b is None:
+            b = _Bucket(key, cp, program, self._label(program, key, static,
+                                                      bag_pads, arr_pads),
+                        static, bag_pads, arr_pads)
+            self._buckets[key] = b
+        return b
+
+    @staticmethod
+    def _label(program, key, static, bag_pads, arr_pads) -> str:
+        parts = [f"{n}:{L}" for n, L in bag_pads.items()]
+        parts += [f"{n}:{L}" for n, L in sorted(arr_pads.items())]
+        parts += [f"{n}={v}" for n, v in static.items()]
+        h = hashlib.md5(repr(key).encode()).hexdigest()[:4]
+        return f"{program}{{{' '.join(parts)}}}#{h}"
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+
+    def _next_ready(self, now, force=False):
+        """Deterministic flush order: full buckets first (insertion
+        order), then timed-out stragglers, then — under drain — anything
+        non-empty."""
+        for key, b in self._buckets.items():
+            if len(b.tickets) >= self.max_batch:
+                return key
+        for key, b in self._buckets.items():
+            if b.tickets and now - b.tickets[0].t_submit >= self.flush_s:
+                return key
+        if force:
+            for key, b in self._buckets.items():
+                if b.tickets:
+                    return key
+        return None
+
+    def pump(self) -> int:
+        """One scheduling step: flush every ready bucket (full or
+        timed-out against the injected clock).  Returns the number of
+        requests completed.  Thread-safe; deterministic under a fake
+        clock."""
+        return self._pump(force=False)
+
+    def drain(self) -> int:
+        """Flush everything regardless of readiness until no request is
+        queued.  Returns the number of requests completed."""
+        return self._pump(force=True)
+
+    def _pump(self, force: bool) -> int:
+        done = 0
+        with self._lock:
+            while True:
+                now = self._clock()
+                key = self._next_ready(now, force=force)
+                if key is None:
+                    return done
+                done += self._flush(self._buckets[key], force)
+
+    # ------------------------------------------------------------------
+    # flush: stack → device_put → one batched XLA call → unstack
+    # ------------------------------------------------------------------
+
+    def _round_lanes(self, B: int) -> int:
+        if not self.batch_round:
+            return B
+        Bp = 1
+        while Bp < B:
+            Bp *= 2
+        return min(Bp, self.max_batch)
+
+    def _stack(self, b: _Bucket, take):
+        """Host-side coalescing of one flush: pad each request's bags (and
+        bag-aligned arrays) to the bucket shape, stack along a new lane
+        axis, round the lane count up (dummy lanes replicate request 0 and
+        are dropped after the call).  Returns (arrays, lengths) numpy
+        pytrees ready for one device_put."""
+        Bp = self._round_lanes(len(take))
+        lanes = list(take) + [take[0]] * (Bp - len(take))
+        arrays, lengths = {}, {}
+        for name, t in b.cp.program.params.items():
+            if t.kind == "dim":
+                continue
+            if t.kind == "bag":
+                L = b.bag_pads[name]
+                ncols = len(take[0].cin[name])
+                arrays[name] = tuple(
+                    np.stack([_pad0(tk.cin[name][ci], L) for tk in lanes])
+                    for ci in range(ncols))
+                lengths[name] = np.asarray(
+                    [tk.cin[name][0].shape[0] for tk in lanes], np.int32)
+            elif name in b.arr_pads:
+                L = b.arr_pads[name]
+                arrays[name] = np.stack(
+                    [_pad0(tk.cin[name], L) for tk in lanes])
+                lengths[name] = np.asarray(
+                    [tk.cin[name].shape[0] for tk in lanes], np.int32)
+            else:
+                arrays[name] = np.stack(
+                    [np.asarray(tk.cin[name]) for tk in lanes])
+        return Bp, arrays, lengths
+
+    def _stage(self, b: _Bucket):
+        """Prefetch: stack the bucket's next flush and start its
+        host→device transfer now, while the in-flight computation still
+        runs.  Consumed by _flush when the ticket set matches."""
+        take = list(b.tickets)[:self.max_batch]
+        if not take:
+            return
+        Bp, arrays, lengths = self._stack(b, take)
+        dev = jax.device_put((arrays, lengths))
+        self._staged[b.key] = (tuple(t.rid for t in take), Bp, dev)
+
+    def _flush(self, b: _Bucket, force: bool) -> int:
+        take = [b.tickets.popleft()
+                for _ in range(min(self.max_batch, len(b.tickets)))]
+        if not take:
+            return 0
+        staged = self._staged.pop(b.key, None)
+        if staged is not None and staged[0] == tuple(t.rid for t in take):
+            Bp, (arrays, lengths) = staged[1], staged[2]
+        else:
+            Bp, arrays, lengths = self._stack(b, take)
+            arrays, lengths = jax.device_put((arrays, lengths))
+        trace0 = b.cp.trace_count
+        out = err = None
+        try:
+            out = b.cp.batched_call((b.key, Bp), b.static, arrays, lengths,
+                                    b.limit_bags, b.limit_arrays)
+        except Exception as ex:            # noqa: BLE001 — fallback path
+            err = ex
+        if out is not None:
+            if b.cp.trace_count > trace0:
+                b.traced += 1
+            else:
+                b.hits += 1
+            # overlap: start the NEXT ready bucket's host→device transfer
+            # while this (asynchronously dispatched) computation runs
+            if self.prefetch:
+                nk = self._next_ready(self._clock(), force=force)
+                if nk is not None and nk not in self._staged:
+                    self._stage(self._buckets[nk])
+            host = {n: np.asarray(v) for n, v in out.items()}
+        b.flushes += 1
+        b.reqs += len(take)
+        b.real_lanes += len(take)
+        b.lanes += Bp
+        for tk in take:
+            for bag, L in b.bag_pads.items():
+                n = tk.cin[bag][0].shape[0]
+                b.pad_rows += L - n
+                b.bag_rows += L
+        now = self._clock()
+        self._t_last = now
+        for i, tk in enumerate(take):
+            if out is None:
+                self._complete_fallback(tk, err, now)
+                continue
+            res = {}
+            for n, v in host.items():
+                lane = v[i]
+                want = tuple(np.shape(tk.cin[n]))
+                if lane.shape != want:
+                    lane = lane[tuple(slice(0, s) for s in want)]
+                res[n] = lane
+            tk._resolve("done", output=res)
+            self.completed += 1
+            self._lat.append(now - tk.t_submit)
+        return len(take)
+
+    def _complete_fallback(self, tk, err, now):
+        """Batched trace failed: serve this request alone through the
+        ordinary run() path (the guaranteed fallback), or fail it."""
+        if not self.sequential_fallback:
+            tk._resolve("failed", error=err)
+            self.failed += 1
+            return
+        try:
+            out = self._programs[tk.program].run(dict(tk.cin))
+            tk._resolve("done",
+                        output={n: np.asarray(v) for n, v in out.items()})
+            self.completed += 1
+            self.seq_fallbacks += 1
+            self._lat.append(now - tk.t_submit)
+        except Exception as ex:            # noqa: BLE001
+            tk._resolve("failed", error=ex)
+            self.failed += 1
+
+    # ------------------------------------------------------------------
+    # blocking / threaded / async front ends
+    # ------------------------------------------------------------------
+
+    def start(self, poll_s: float = 2e-4):
+        """Run pump() from a daemon thread (real-clock servers)."""
+        if self._thread is not None:
+            return
+        self._stop = threading.Event()
+
+        def loop():
+            while not self._stop.is_set():
+                if self.pump() == 0:
+                    time.sleep(poll_s)
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="plan-server-pump")
+        self._thread.start()
+
+    def stop(self):
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    def run(self, program: str, inputs: dict, timeout: float = 60.0) -> dict:
+        """Submit and wait.  With a pump thread this just blocks on the
+        ticket; without one it pumps inline (real clock only)."""
+        t = self.submit(program, inputs)
+        if self._thread is not None:
+            return t.result(timeout)
+        deadline = time.monotonic() + timeout
+        while not t.done():
+            if self.pump() == 0:
+                if time.monotonic() > deadline:
+                    raise TimeoutError(f"request {t.rid} still queued")
+                time.sleep(1e-4)
+        return t.result(0)
+
+    async def arun(self, program: str, inputs: dict,
+                   timeout: float = 60.0) -> dict:
+        """Asyncio front end: submit, then await the ticket without
+        blocking the event loop.  Requires a running pump thread."""
+        import asyncio
+        t = self.submit(program, inputs)
+        return await asyncio.to_thread(t.result, timeout)
+
+    # ------------------------------------------------------------------
+    # observability (stats() is the data, explain_serving() the text)
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            queued = sum(len(b.tickets) for b in self._buckets.values())
+            lanes = sum(b.lanes for b in self._buckets.values())
+            real = sum(b.real_lanes for b in self._buckets.values())
+            lat_ms = [x * 1e3 for x in self._lat]
+            span = (self._t_last - self._t0) \
+                if self._t0 is not None and self._t_last is not None else 0.0
+            return {
+                "admitted": self.admitted, "completed": self.completed,
+                "cancelled": self.cancelled, "failed": self.failed,
+                "queued": queued,
+                "seq_fallbacks": self.seq_fallbacks,
+                "flushes": sum(b.flushes for b in self._buckets.values()),
+                "batch_traced": sum(b.traced
+                                    for b in self._buckets.values()),
+                "batch_hits": sum(b.hits for b in self._buckets.values()),
+                "p50_ms": _pct(lat_ms, 0.50), "p99_ms": _pct(lat_ms, 0.99),
+                "rps": self.completed / span if span > 0 else 0.0,
+                "occupancy": 100.0 * real / lanes if lanes else 0.0,
+                "buckets": {
+                    b.label: {"depth": len(b.tickets), "reqs": b.reqs,
+                              "flushes": b.flushes, "occ": b.occ(),
+                              "pad": b.padf(), "traced": b.traced,
+                              "hits": b.hits}
+                    for b in self._buckets.values()},
+            }
+
+    def explain_serving(self) -> str:
+        """Golden-testable dump of the serving state, the way explain()
+        pins the plan: one row per shape bucket, then the admission
+        totals, the latency/throughput probes, and the batch-signature
+        compile-cache line."""
+        s = self.stats()
+        out = [f"== serving plans: {len(self._programs)} programs, "
+               f"max_batch={self.max_batch}, "
+               f"flush={self.flush_s * 1e3:.1f}ms, "
+               f"bucket_floor={self.bucket_floor} =="]
+        for label, r in s["buckets"].items():
+            out.append(f"bucket {label}: depth={r['depth']} "
+                       f"reqs={r['reqs']} flushes={r['flushes']} "
+                       f"occ={r['occ']:.0f}% pad={r['pad']:.0f}% "
+                       f"traced={r['traced']} hits={r['hits']}")
+        out.append(f"totals: admitted={s['admitted']} "
+                   f"completed={s['completed']} "
+                   f"cancelled={s['cancelled']} failed={s['failed']} "
+                   f"queued={s['queued']}")
+        out.append(f"latency: p50={s['p50_ms']:.1f}ms "
+                   f"p99={s['p99_ms']:.1f}ms  "
+                   f"throughput={s['rps']:.1f} req/s")
+        out.append(f"whole-program cache: {s['batch_traced']} batch "
+                   f"signatures traced, {s['batch_hits']} hits, "
+                   f"{s['seq_fallbacks']} sequential fallbacks")
+        return "\n".join(out)

@@ -1,6 +1,51 @@
 import os
 import sys
 
+import pytest
+
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # real single-device CPU; only launch/dryrun.py forces 512 host devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# ---------------------------------------------------------------------------
+# deterministic serving harness (shared by test_serve_plans / test_serve_*)
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    """Injectable monotonic clock: time only moves when the test says so,
+    so flush-timeout scheduling decisions replay exactly — no real sleeps,
+    no wall-clock flakiness."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        assert dt >= 0, "monotonic clocks do not rewind"
+        self.t += dt
+
+
+def run_schedule(clock: FakeClock, events, pump):
+    """Replay a scripted arrival schedule against an injected clock:
+    `events` is a sequence of (t_seconds, thunk) in non-decreasing time
+    order; between events the clock jumps (never sleeps) and `pump()` runs
+    once per distinct timestamp so timeout flushes fire exactly where the
+    script puts them.  Returns the total number of completions pump
+    reported."""
+    done = 0
+    for t, thunk in events:
+        assert t >= clock.t, "schedule must be time-ordered"
+        if t > clock.t:
+            clock.advance(t - clock.t)
+            done += pump()
+        thunk()
+        done += pump()
+    return done
+
+
+@pytest.fixture
+def fake_clock():
+    return FakeClock()

@@ -1,8 +1,15 @@
 """Continuous-batching serve engine: mixed-length requests decoded in
-shared slots must produce exactly the tokens of independent greedy runs."""
+shared slots must produce exactly the tokens of independent greedy runs.
+
+Request counts deliberately exceed the slot count everywhere — slot count
+and batch size are NOT the same thing, and the scripted-arrival test
+drives admissions mid-run through the shared conftest harness (the same
+FakeClock/run_schedule the plan-serving suite uses)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from conftest import FakeClock, run_schedule
 
 from repro.configs import smoke_config
 from repro.models import get_model
@@ -50,3 +57,55 @@ def test_engine_slot_recycling():
     eng.run()
     assert all(r.done for r in reqs)
     assert all(len(r.out) == 3 for r in reqs)
+
+
+def test_engine_rids_unique_across_queue_drain():
+    """Regression: default rids came from len(queue), so ids recycled
+    once the queue drained — two distinct requests could alias.  The
+    monotonic counter must hand every request its own id, including
+    around explicit-rid submissions."""
+    cfg = smoke_config("llama3-8b")
+    eng = ServeEngine(cfg, get_model(cfg).init(0), slots=1, max_seq=32)
+    rng = np.random.default_rng(2)
+
+    def sub(**kw):
+        return eng.submit(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                          2, **kw)
+
+    a = sub()
+    eng.run()                       # queue drains back to empty
+    b = sub()                       # would have re-issued rid 0
+    c = sub(rid=40)                 # explicit ids advance the counter too
+    d = sub()
+    eng.run()
+    rids = [r.rid for r in (a, b, c, d)]
+    assert len(set(rids)) == 4, rids
+    assert d.rid > c.rid == 40 > b.rid > a.rid
+
+
+def test_engine_scripted_midrun_arrivals():
+    """Requests arriving WHILE earlier ones decode (more requests than
+    slots, staggered on the shared fake-clock schedule) still match the
+    independent greedy reference exactly."""
+    cfg = smoke_config("llama3-8b")
+    model = get_model(cfg)
+    params = model.init(0)
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(cfg, params, slots=2, max_seq=48)
+
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 4, 8, 5)]       # 4 requests > 2 slots
+    reqs = []
+    clock = FakeClock()
+    events = [
+        (0.000, lambda: reqs.append(eng.submit(prompts[0], 5))),
+        (0.001, lambda: reqs.append(eng.submit(prompts[1], 5))),
+        (0.002, lambda: reqs.append(eng.submit(prompts[2], 5))),  # no slot
+        (0.003, lambda: reqs.append(eng.submit(prompts[3], 5))),  # queued
+    ]
+    run_schedule(clock, events, eng.step)   # each tick = one engine step
+    eng.run()                               # drain the stragglers
+    assert all(r.done for r in reqs)
+    for p, r in zip(prompts, reqs):
+        want = _greedy_reference(cfg, model, params, p, 5, 48)
+        assert r.out == want, (r.out, want)

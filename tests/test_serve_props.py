@@ -1,0 +1,119 @@
+"""Property tests for the plan-serving layer: random interleavings of
+submit / cancel / pump / clock-advance / drain never lose or duplicate a
+response, and the admission ledger stays consistent
+(admitted == completed + cancelled + failed + queued).
+
+Hypothesis generates the interleavings when available (optional import,
+as in test_kernels.py); without it the same property runs over a fixed
+sweep of seeded random schedules, so the invariant is exercised either
+way.  Everything runs on the shared FakeClock — no real sleeps.
+"""
+import numpy as np
+import pytest
+
+try:        # interleavings are hypothesis-driven; the seeded sweep isn't
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+from conftest import FakeClock
+from test_core_programs import data_for
+
+from repro.core import programs as progs
+from repro.core.lower import compile_program
+from repro.serve import PlanServer
+
+_CPS = {}
+
+
+def cps():
+    if not _CPS:
+        for name in ("group_by", "pagerank"):
+            _CPS[name] = compile_program(getattr(progs, name))
+    return _CPS
+
+
+def run_interleaving(ops):
+    """Execute one schedule.  `ops` is a list of (kind, x) with kind in
+    submit (x = bag-length scale index), cancel (x = request index),
+    advance (x = ms), pump, drain — checking the ledger invariant after
+    every step and the exactly-once completion property at the end."""
+    clock = FakeClock()
+    srv = PlanServer(cps(), clock=clock, max_batch=3, flush_ms=2.0,
+                     bucket_floor=8)
+    rng = np.random.default_rng(7)
+    tickets = []
+
+    def check_ledger():
+        s = srv.stats()
+        assert s["admitted"] == (s["completed"] + s["cancelled"]
+                                 + s["failed"] + s["queued"])
+        assert s["admitted"] == len(tickets)
+
+    for kind, x in ops:
+        if kind == "submit":
+            name = ("group_by", "pagerank")[x % 2]
+            d = data_for(name)
+            m = 10 + 7 * (x % 4)            # ragged: crosses bucket edges
+            if name == "group_by":
+                d["S"] = (rng.integers(0, 10, m).astype(np.float64),
+                          rng.standard_normal(m))
+            else:
+                N = int(d["N"])
+                d["E"] = (rng.integers(0, N, m).astype(np.float64),
+                          rng.integers(0, N, m).astype(np.float64))
+            tickets.append(srv.submit(name, d))
+        elif kind == "cancel" and tickets:
+            srv.cancel(tickets[x % len(tickets)])
+        elif kind == "advance":
+            clock.advance(x / 1e3)
+        elif kind == "pump":
+            srv.pump()
+        elif kind == "drain":
+            srv.drain()
+        check_ledger()
+
+    srv.drain()
+    check_ledger()
+    s = srv.stats()
+    assert s["queued"] == 0
+    # exactly-once: every ticket resolved exactly one way, none lost
+    assert all(t._completions == 1 for t in tickets)
+    done = [t for t in tickets if t.state == "done"]
+    assert len({t.rid for t in tickets}) == len(tickets)    # unique rids
+    assert s["completed"] == len(done)
+    assert s["failed"] == 0
+    for t in done:                          # every response has a payload
+        assert t.output is not None and set(t.output)
+
+
+_OP = [("submit", 0), ("submit", 1), ("submit", 2), ("submit", 3),
+       ("cancel", 0), ("cancel", 1), ("advance", 1), ("advance", 3),
+       ("pump", 0), ("drain", 0)]
+
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.sampled_from(_OP), min_size=1, max_size=24))
+    def test_interleavings_never_lose_or_duplicate(ops):
+        run_interleaving(ops)
+else:
+    @pytest.mark.parametrize("seed", range(12))
+    def test_interleavings_never_lose_or_duplicate(seed):
+        rng = np.random.default_rng(seed)
+        ops = [_OP[i] for i in rng.integers(0, len(_OP), 24)]
+        run_interleaving(ops)
+
+
+def test_cancel_all_then_drain():
+    """Degenerate interleaving: everything cancelled before any flush —
+    drain must be a no-op and the ledger must balance."""
+    srv = PlanServer(cps(), clock=FakeClock(), max_batch=4)
+    ts = [srv.submit("group_by", data_for("group_by")) for _ in range(3)]
+    for t in ts:
+        assert srv.cancel(t)
+    assert srv.drain() == 0
+    s = srv.stats()
+    assert s["cancelled"] == s["admitted"] == 3
+    assert s["completed"] == s["queued"] == 0
