@@ -1,0 +1,174 @@
+"""Robustness cost model (DESIGN.md §11): what do faults actually cost?
+
+Two measurements, emitted as BENCH_faults.json via
+``benchmarks.run --sections faults``:
+
+* **Serve goodput under transient faults** — the mixed serve workload
+  (reusing serve_bench's programs/shapes) at 64 closed-loop clients with
+  0% / 5% / 20% of batched calls raising a scripted transient on first
+  attempt.  Transients retry with the batch intact, so the gate is
+  goodput (completed requests/sec) ≥ `gate` of the fault-free run —
+  recovery overhead, not correctness, is what's being priced.
+
+* **Mid-loop resume overhead** — an uninterrupted stepwise pagerank run
+  vs kill-at-iteration-k + resume-from-snapshot (runtime/ft.LoopRunner
+  through checkpoint/manager.py).  Reported as the resumed wall time
+  (re-executes pre-loop nodes + the tail iterations) over the
+  uninterrupted wall time; the bit-identity of the recovered ranks is
+  asserted, not measured.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.serve_bench import MAX_BATCH, SPECS, _cps, make_inputs
+
+CLIENTS = 64
+REQUESTS = 192
+FAULT_RATES = (0.0, 0.05, 0.20)
+RESUME_STEPS = 12          # pagerank iterations for the resume measurement
+KILL_AT = 8                # killed at this loop iteration (1-based hit)
+
+
+def _transient_specs(rate: float, horizon: int = 10 ** 4):
+    """Scripted transients on `rate` of the first `horizon` batched
+    calls, evenly spaced — deterministic, replayable schedules."""
+    from repro.core import faults as F
+    if rate <= 0:
+        return []
+    stride = max(1, round(1.0 / rate))
+    return [F.FaultSpec("serve.batched_call", "transient", nth=n)
+            for n in range(1, horizon, stride)]
+
+
+def _measure_goodput(rate: float, requests: int = REQUESTS) -> dict:
+    from repro.core import faults as F
+    from repro.serve import PlanServer
+    srv = PlanServer(_cps(), max_batch=MAX_BATCH, flush_ms=1.0)
+    srv.policy.backoff_s = 1e-4          # price retries, not sleeps
+    pool = [make_inputs(name, m, seed=i)
+            for i, (name, m) in enumerate(SPECS)]
+    t0 = time.monotonic()
+    submitted = 0
+    with F.inject(*_transient_specs(rate)):
+        while submitted < requests:
+            round_n = min(CLIENTS, requests - submitted)
+            tickets = []
+            for c in range(round_n):
+                name, _ = SPECS[(submitted + c) % len(SPECS)]
+                tickets.append(srv.submit(
+                    name, pool[(submitted + c) % len(SPECS)]))
+            submitted += round_n
+            srv.pump()
+            srv.drain()
+            assert all(t.state == "done" for t in tickets)
+    elapsed = time.monotonic() - t0
+    s = srv.stats()
+    assert s["completed"] == requests and s["failed"] == 0
+    return {"fault_rate_pct": round(100 * rate, 1),
+            "goodput_rps": round(requests / elapsed, 1),
+            "retries": s["retries"],
+            "failed_flushes": s["failed_flushes"],
+            "bisections": s["bisections"]}
+
+
+def _pagerank_inputs(steps: int) -> dict:
+    rng = np.random.default_rng(7)
+    N, ne = 64, 512
+    return dict(E=(rng.integers(0, N, ne).astype(np.float64),
+                   rng.integers(0, N, ne).astype(np.float64)),
+                P=np.full(N, 1.0 / N), NP=np.zeros(N), C=np.zeros(N),
+                N=N, num_steps=float(steps), steps=0.0, b=0.85)
+
+
+def _measure_resume() -> dict:
+    from repro.core import faults as F
+    from repro.core.lower import compile_program
+    from repro.core.programs import pagerank
+    from repro.runtime import LoopRunner
+    cp = compile_program(pagerank)
+    ins = _pagerank_inputs(RESUME_STEPS)
+    cp.run_stepwise(dict(ins))                      # warmup (traces)
+    t0 = time.monotonic()
+    ref = cp.run_stepwise(dict(ins))
+    t_plain = time.monotonic() - t0
+    with tempfile.TemporaryDirectory() as d:
+        runner = LoopRunner(cp, d, every=1)
+        t0 = time.monotonic()
+        try:
+            with F.inject(F.FaultSpec("lower.loop_iter", "deterministic",
+                                      nth=KILL_AT, message="kill")):
+                runner.run(dict(ins), resume=False)
+            raise AssertionError("kill never fired")
+        except F.DeterministicFault:
+            pass
+        t_to_kill = time.monotonic() - t0
+        resumed = LoopRunner(cp, d, every=1)
+        t0 = time.monotonic()
+        out = resumed.run(dict(ins), resume=True)
+        t_resume = time.monotonic() - t0
+    assert all(np.array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+               for k in ref), "resume must be bit-identical"
+    return {"steps": RESUME_STEPS, "killed_at": KILL_AT,
+            "uninterrupted_s": round(t_plain, 4),
+            "run_to_kill_s": round(t_to_kill, 4),
+            "resume_s": round(t_resume, 4),
+            "resume_overhead_x": round(t_resume / t_plain, 3)
+            if t_plain > 0 else 0.0,
+            "snapshots": runner.saves,
+            "resumed_from_step": resumed.resumed_from}
+
+
+def rows() -> dict:
+    _measure_goodput(0.0, requests=max(len(SPECS), CLIENTS))  # warmup
+    return {"goodput": [_measure_goodput(r) for r in FAULT_RATES],
+            "resume": _measure_resume()}
+
+
+def print_rows(rws) -> None:
+    print("fault_rate_pct,goodput_rps,retries,failed_flushes")
+    for r in rws["goodput"]:
+        print(f"{r['fault_rate_pct']},{r['goodput_rps']:.0f},"
+              f"{r['retries']},{r['failed_flushes']}")
+    rs = rws["resume"]
+    print(f"resume: uninterrupted={rs['uninterrupted_s']}s "
+          f"resume={rs['resume_s']}s "
+          f"overhead={rs['resume_overhead_x']}x "
+          f"(killed at {rs['killed_at']}/{rs['steps']})")
+
+
+def to_json(rws) -> dict:
+    import jax
+    return {"section": "faults", "unit": "requests_per_sec",
+            "platform": jax.default_backend(),
+            "clients": CLIENTS, "max_batch": MAX_BATCH,
+            "fault_rates": list(FAULT_RATES), **rws}
+
+
+def check_rows(rws, gate: float = 0.5) -> bool:
+    """--check gate: goodput at 20% injected transients must stay ≥
+    `gate` of the fault-free goodput (each transient costs one extra
+    batched call plus a tiny backoff — losing more than half means the
+    retry path regressed), and resume must not cost more than the
+    uninterrupted run plus the re-executed prefix (≤ 2× is generous on
+    CPU timer noise)."""
+    by = {r["fault_rate_pct"]: r["goodput_rps"] for r in rws["goodput"]}
+    worst, clean = by[max(by)], by[0.0]
+    bad = False
+    if worst < gate * clean:
+        print(f"[faults] GOODPUT GATE FAILED: {worst:.0f} rps at "
+              f"{max(by)}% faults < {gate}x fault-free {clean:.0f} rps")
+        bad = True
+    else:
+        print(f"[faults] goodput gate OK ({worst / clean:.2f}x of "
+              "fault-free under 20% transients)")
+    ov = rws["resume"]["resume_overhead_x"]
+    if ov > 2.0:
+        print(f"[faults] RESUME GATE FAILED: overhead {ov}x > 2.0x")
+        bad = True
+    else:
+        print(f"[faults] resume overhead OK ({ov}x of uninterrupted)")
+    return bad

@@ -31,6 +31,11 @@ Sections:
             kmeans workload at 1/8/64 simulated clients (DESIGN.md §10);
             emits BENCH_serve.json; --check fails when 64-client
             throughput is < 3x 1-client (wired into CI)
+  [faults]  robustness cost (DESIGN.md §11): serve goodput at 0/5/20%
+            injected transient faults plus mid-loop checkpoint/resume
+            overhead on pagerank; emits BENCH_faults.json; --check fails
+            when goodput under 20%% faults drops below 0.5x fault-free
+            or resume costs > 2x the uninterrupted run (chaos CI)
 """
 from __future__ import annotations
 
@@ -105,11 +110,15 @@ def main() -> None:
     ap.add_argument("--serve-json-out", default=os.path.join(
         _REPO, "BENCH_serve.json"),
         help="serve artifact path ('' disables)")
+    ap.add_argument("--faults-json-out", default=os.path.join(
+        _REPO, "BENCH_faults.json"),
+        help="faults artifact path ('' disables)")
     args = ap.parse_args()
     sections = args.sections.split(",")
-    if args.check and not {"fig3", "dist", "skew", "serve"} & set(sections):
-        ap.error("--check gates fig3, dist, skew, and/or serve: include "
-                 "one in --sections")
+    if args.check and not {"fig3", "dist", "skew", "serve",
+                           "faults"} & set(sections):
+        ap.error("--check gates fig3, dist, skew, serve, and/or faults: "
+                 "include one in --sections")
 
     if {"dist", "skew"} & set(sections):
         if len(sections) != 1:
@@ -338,6 +347,20 @@ def main() -> None:
                 json.dump(serve_bench.to_json(rows), f, indent=1)
             print(f"[serve] wrote {args.serve_json_out}")
         if args.check and serve_bench.check_rows(rows):
+            check_failed = True
+
+    if "faults" in sections:
+        from benchmarks import faults_bench
+        print("[faults] serve goodput under injected transients + "
+              "mid-loop resume overhead (DESIGN.md §11)")
+        rows = faults_bench.rows()
+        faults_bench.print_rows(rows)
+        print()
+        if args.faults_json_out:
+            with open(args.faults_json_out, "w") as f:
+                json.dump(faults_bench.to_json(rows), f, indent=1)
+            print(f"[faults] wrote {args.faults_json_out}")
+        if args.check and faults_bench.check_rows(rows):
             check_failed = True
 
     if check_failed:

@@ -124,3 +124,14 @@ class CheckpointManager:
         if shardings is not None:
             params = jax.device_put(params, shardings)
         return meta["step"], params, opt, meta["extra"]
+
+    def restore_flat(self, step: int):
+        """Template-free read: (step, {path: np.ndarray}, extra).  The
+        mid-loop resume path (runtime/ft.LoopRunner) uses this — after a
+        crash there is no live pytree to unflatten into; the flat keys
+        (``loop<i>/<carry-name>``) are self-describing."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        pf = np.load(os.path.join(d, "params.npz"))
+        return meta["step"], {k: pf[k] for k in pf.files}, meta["extra"]

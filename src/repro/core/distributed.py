@@ -102,6 +102,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
+from . import faults as F
 from . import plan
 from .dist_analysis import (Dist, aligned_reads, leading_key_var,
                             round_axis, shard_slice_certificates)
@@ -173,6 +174,14 @@ class DistributedProgram:
             n.dest for n in _walk_plan(cp.plan)
             if isinstance(n, plan.Rebalance))
         self._balance: dict = {}
+        # failure policy (DESIGN.md §11): the ledger and retry policy are
+        # SHARED with the wrapped CompiledProgram — one ladder per program,
+        # whichever layer descends it.  _force_rep is the REP-everything
+        # ladder level: place() replicates every dense array (the ⊥ of the
+        # distribution lattice, same as shard_dense=False) for one run.
+        self.faults = cp.faults
+        self.policy = cp.policy
+        self._force_rep = False
 
     def _placed_oned(self, name) -> bool:
         # ONED_VAR counts: variable-length arrays still shard as equal
@@ -194,6 +203,11 @@ class DistributedProgram:
         # (shapes are known here): shard vs replicate is an op_select call
         self.placements = dict(self._base_placements)
         self._demoted = {}
+        if self._force_rep:
+            # REP-everything ladder level: every dense array replicates
+            # (bags still shard — they are the iteration space); the
+            # demotion loop below is vacuous since nothing is placed ONED
+            self.placements = {a: Dist.REP for a in self.placements}
         import numpy as _np
         for name, t in self.cp.program.params.items():
             if t.kind not in ("vector", "matrix", "map") \
@@ -264,6 +278,8 @@ class DistributedProgram:
         receives its K/P rows) or allreduce + local slice (the only
         correct form for non-+ monoids, which have no reduce-scatter
         primitive)."""
+        F.site("dist.exchange", op=op, dest_oned=dest_oned,
+               exchange=exchange)
         if not dest_oned:
             return self._psum(part, op)
         if op == "+" and exchange == "psum_scatter":
@@ -509,6 +525,22 @@ class DistributedProgram:
                     return False
         return True
 
+    def _call_round(self, fn, args, site_name, label):
+        """Execute a traced round/fused program under the failure policy:
+        the injection site fires per attempt, transients retry at this
+        level (bounded, backoff), and the wall time feeds the straggler
+        watchdog.  Capacity/deterministic errors re-raise — descending is
+        the caller's move (per-member bail for fused, the run() ladder
+        for rounds)."""
+        def attempt():
+            F.site(site_name, label=label)
+            return fn(*args)
+        t0 = self.faults.clock()
+        out = F.run_with_retries(attempt, policy=self.policy,
+                                 ledger=self.faults, label=label)
+        self.faults.note_time(label, self.faults.clock() - t0)
+        return out
+
     def _run_round(self, node, spec, env, limits, array_limits):
         cp = self.cp
         parts, kinds = spec["parts"], spec["kinds"]
@@ -599,10 +631,11 @@ class DistributedProgram:
                      tuple(sorted((d, x.backend)
                                   for d, x in exchanges.items())),
                      tuple(sorted(salts.items())))
+        rlabel = f"round:{type(node).__name__}"
         fn = self._round_cache.get(cache_key)
         if fn is not None:
             self._round_hits += 1
-            results = fn(*args)
+            results = self._call_round(fn, args, "dist.round_exec", rlabel)
             # restore the trace-time snapshot: the cached round re-runs
             # exactly what was traced, whatever happened in between
             self._strategy[id(node)] = self._strategy_by_key[cache_key]
@@ -676,7 +709,8 @@ class DistributedProgram:
                                out_specs=out_specs))
         self._round_cache[cache_key] = fn
         self._round_traces += 1
-        results = fn(*args)              # traces: executor notes decisions
+        # traces: executor notes decisions
+        results = self._call_round(fn, args, "dist.round_exec", rlabel)
         notes = self._part_notes(node)
         self._round_notes[cache_key] = notes
         self._decisions.update(notes)
@@ -909,7 +943,15 @@ class DistributedProgram:
         fn = self._round_cache.get(cache_key)
         if fn is not None:
             self._round_hits += 1
-            results = fn(*args)
+            try:
+                results = self._call_round(fn, args, "dist.fused_compile",
+                                           "fused")
+            except Exception as ex:      # noqa: BLE001 — ladder descent
+                # classified descent: the per-member fallback is the next
+                # ladder level for a fused region (fusion never changes
+                # results, so falling back is always sound)
+                self.faults.descend("fused", "per-member rounds", ex)
+                return bail()
             self._strategy.update(self._strategy_by_key[cache_key])
             self._decisions.update(self._round_notes[cache_key])
             for d, res in zip(dests_order, results):
@@ -1074,10 +1116,14 @@ class DistributedProgram:
                                in_specs=tuple(in_specs),
                                out_specs=out_specs, check_rep=False))
         try:
-            results = fn(*args)           # traces: executor notes decisions
-        except Exception:
-            # a member materialization the fused ctx cannot express —
-            # guaranteed fallback to per-member rounds, results unchanged
+            # traces: executor notes decisions
+            results = self._call_round(fn, args, "dist.fused_compile",
+                                       "fused")
+        except Exception as ex:           # noqa: BLE001 — ladder descent
+            # a member materialization the fused ctx cannot express, or a
+            # classified non-transient fault — guaranteed fallback to
+            # per-member rounds, results unchanged
+            self.faults.descend("fused", "per-member rounds", ex)
             for k in strat:
                 self._strategy.pop(k, None)
             return bail()
@@ -1141,6 +1187,11 @@ class DistributedProgram:
         self._round_lines(self.cp.plan, 0, out)
         return "\n".join(out)
 
+    def explain_faults(self) -> str:
+        """The shared per-program failure ledger (one ladder per program,
+        whichever layer — distributed or single-device — descended it)."""
+        return self.cp.explain_faults()
+
     def _round_lines(self, nodes, indent, out):
         pre = "  " * indent
         for node in nodes:
@@ -1170,9 +1221,46 @@ class DistributedProgram:
 
     # ------------------------- entry -------------------------
     def run(self, inputs: dict) -> dict:
+        """Distributed ladder (DESIGN.md §11): fused → per-member rounds
+        (inside _run_once, via _fused_bail) → REP-everything placements →
+        the wrapped single-device program, whose own ladder ends at the
+        interpreter oracle.  Transients retry at each level first; a
+        deterministic error gets exactly ONE descent (REP-everything) and
+        surfaces if it reproduces there — it is a user error, and the
+        deeper levels would only mask it."""
+        try:
+            return F.run_with_retries(
+                lambda: self._run_once(inputs),
+                policy=self.policy, ledger=self.faults, label="dist")
+        except Exception as ex:          # noqa: BLE001 — ladder descent
+            self.faults.descend("rounds", "rep", ex)
+            if F.classify(ex) == "deterministic":
+                out = self._run_once(inputs, force_rep=True)
+                self.faults.recover("rep")
+                return out
+            try:
+                out = F.run_with_retries(
+                    lambda: self._run_once(inputs, force_rep=True),
+                    policy=self.policy, ledger=self.faults, label="rep")
+                self.faults.recover("rep")
+                return out
+            except Exception as ex2:     # noqa: BLE001 — ladder descent
+                if F.classify(ex2) == "deterministic":
+                    raise
+                self.faults.descend("rep", "single-device", ex2)
+                out = self.cp.run(inputs)
+                self.faults.recover("single-device")
+                return out
+
+    def _run_once(self, inputs: dict, force_rep: bool = False) -> dict:
         env = {}
         self._fused_bail = set()     # placements/shapes are per-run
-        placed, limits, array_limits = self.place(inputs)
+        self._force_rep = force_rep
+        try:
+            placed, limits, array_limits = self.place(inputs)
+        finally:
+            self._force_rep = False  # place() consumed it; don't leak
+        #                              into direct place() calls (tests)
         for name, t in self.cp.program.params.items():
             v = placed[name]
             if t.kind in ("vector", "matrix", "map"):

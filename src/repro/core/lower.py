@@ -59,6 +59,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from . import faults as F
 from . import plan as P
 from .analysis import check as check_restrictions
 from .comprehension import Get, pretty
@@ -454,6 +455,10 @@ class PlanExecutor:
                 env[node.dest] = self.run_node(node, env, ctx)
 
     def run_node(self, node, env, ctx: ExecContext = _EMPTY_CTX):
+        # per-node guard site (DESIGN.md §11): under jit this fires at
+        # trace time — a fault here fails the whole-program trace, whose
+        # ladder then descends to the eager path where it fires again
+        F.site("lower.node", node=type(node).__name__)
         if isinstance(node, P.Rebalance):
             # single device: one shard holds every row, blocks are balanced
             # by construction — the round is the identity (the distributed
@@ -1216,13 +1221,29 @@ class CompiledProgram:
         self.compile_mode = compile_mode
         self.donate = donate
         self._whole_cache: dict = {}   # signature → (fn, decisions snapshot)
-        self._whole_disabled = False
+        # per-SIGNATURE compile-failure memoization (DESIGN.md §11): a
+        # failed whole-program trace disables only ITS signature, for
+        # policy.disable_ttl runs — other shapes keep the whole path, and
+        # the expired signature gets re-attempted (bounded retry budget)
+        self._whole_bad: dict = {}     # signature key → remaining ttl
         self.trace_count = 0           # whole-program traces (test probe)
         self.cache_hits = 0
+        self.trace_failures = 0        # failed whole traces (probe)
+        self.whole_retries = 0         # expired disables re-attempted
+        self.faults = F.FaultLedger(prog.name)   # failure ledger (§11);
+        self.policy = F.RetryPolicy()  # shared with DistributedProgram
+        self._last_whole_exc = None    # why the LAST _run_whole descended
         self._donate_names = frozenset(
             d for n in self.plan for d in P.dests_of(n)
             if prog.params.get(d) is not None
             and prog.params[d].kind != "dim")
+
+    @property
+    def _whole_disabled(self) -> bool:
+        """Back-compat probe: True while ANY signature is sitting out its
+        disable ttl (the old flag was global AND permanent — §11 made it
+        per-signature with a bounded retry budget)."""
+        return bool(self._whole_bad)
 
     def pretty_target(self) -> str:
         return "\n".join(pretty(s) for s in self.target)
@@ -1241,7 +1262,11 @@ class CompiledProgram:
             self._whole_disabled else "whole"
         text += (f"\nwhole-program: mode={mode}, {self.trace_count} traced, "
                  f"{self.cache_hits} cache hits"
-                 + (", donate=on" if self.donate else ""))
+                 + (", donate=on" if self.donate else "")
+                 + (f", {self.trace_failures} trace failures "
+                    f"({len(self._whole_bad)} signatures sitting out ttl, "
+                    f"{self.whole_retries} re-attempted)"
+                    if self.trace_failures or self.whole_retries else ""))
         return text
 
     # -- public execution interface (distributed.py consumes this) --
@@ -1317,6 +1342,19 @@ class CompiledProgram:
         salts = collect_salts(self.plan, env, self.selector,
                               self.config.skew_salting)
         key = (sig, donate, tuple(sorted(salts.items())))
+        left = self._whole_bad.get(key)
+        if left is not None:
+            # this signature's trace failed recently: sit out the rest of
+            # its disable ttl at the eager level, then re-attempt (§11 —
+            # the old behaviour disabled the whole PROGRAM forever)
+            if left > 1:
+                self._whole_bad[key] = left - 1
+                return None
+            del self._whole_bad[key]
+            self.whole_retries += 1
+            self.faults.record("retry", "whole",
+                               "signature disable ttl expired: "
+                               "re-attempting whole-program trace")
         ent = self._whole_cache.get(key)
         if ent is None:
             def traced(dnt, kpt, _static=dict(static)):
@@ -1328,11 +1366,19 @@ class CompiledProgram:
                 return {n: e[n] for n in self.program.outputs}
 
             fn = jax.jit(traced, donate_argnums=(0,) if donated else ())
+
+            def attempt():
+                F.site("lower.whole_trace", program=self.program.name)
+                return fn(donated, kept)      # traces the whole plan once
             try:
-                out = fn(donated, kept)       # traces the whole plan once
-            except Exception:
-                self._whole_disabled = True   # guaranteed eager fallback
-                return None
+                out = F.run_with_retries(attempt, policy=self.policy,
+                                         ledger=self.faults, label="whole")
+            except Exception as ex:           # noqa: BLE001 — ladder
+                self.trace_failures += 1
+                self._whole_bad[key] = self.policy.disable_ttl
+                self._last_whole_exc = ex
+                self.faults.descend("whole", "eager", ex)
+                return None                   # guaranteed eager fallback
             self.trace_count += 1
             self._whole_cache[key] = (fn, dict(self.executor.decisions))
             return out
@@ -1344,13 +1390,98 @@ class CompiledProgram:
         return fn(donated, kept)
 
     def run(self, inputs: dict) -> dict:
-        if self.compile_mode == "whole" and not self._whole_disabled:
+        whole_failed = False
+        if self.compile_mode == "whole":
+            self._last_whole_exc = None
             out = self._run_whole(inputs)
             if out is not None:
                 return out
+            whole_failed = self._last_whole_exc is not None
+
+        def eager():
+            env = self.prepare_env(inputs)
+            self.execute(env, salts=collect_salts(
+                self.plan, env, self.selector, self.config.skew_salting))
+            return {n: env[n] for n in self.program.outputs}
+
+        # degradation ladder (DESIGN.md §11): whole → eager per-node (the
+        # executor's own node fallback chains live inside) → interpreter
+        # oracle.  Transients retry at each level with bounded backoff;
+        # deterministic errors get AT MOST one descent before surfacing.
+        try:
+            out = F.run_with_retries(eager, policy=self.policy,
+                                     ledger=self.faults, label="eager")
+            if whole_failed:
+                self.faults.recover("eager")
+            return out
+        except Exception as ex:               # noqa: BLE001 — ladder
+            if F.classify(ex) == "deterministic":
+                # a user error reproduces at every level: it already got
+                # its one descent (whole→eager) or none was available —
+                # surface it, never fall through to the oracle (which
+                # would silently mask it)
+                raise
+            # transient/capacity persisting past the eager retries: the
+            # reference interpreter is the bottom rung — correct numpy
+            # float64 results (not bit-identical; the ledger says so)
+            self.faults.descend("eager", "interp", ex)
+            from .interp import run as _oracle
+            out = _oracle(self.program, dict(inputs))
+            self.faults.recover("interp")
+            return {n: out[n] for n in self.program.outputs}
+
+    def explain_faults(self) -> str:
+        """Render the failure ledger (DESIGN.md §11) next to explain():
+        retry/descent/recovery/straggler events plus the per-signature
+        whole-program disable state."""
+        text = self.faults.explain()
+        text += (f"\nwhole-program: {self.trace_failures} trace failures, "
+                 f"{len(self._whole_bad)} signatures sitting out ttl "
+                 f"(budget {self.policy.disable_ttl} runs), "
+                 f"{self.whole_retries} re-attempted")
+        return text
+
+    # ---- checkpointable execution (DESIGN.md §11) ----
+    def run_stepwise(self, inputs: dict, *, loop_state=None, observer=None):
+        """Eager execution with HOST-DRIVEN top-level sequential loops —
+        the checkpoint/resume entry.  run() executes a SeqLoop as one
+        on-device lax.while_loop, so no mid-loop state ever reaches the
+        host; this path instead evaluates the condition and executes the
+        body once per iteration, calling
+        ``observer(loop_idx, iteration, carry_dict)`` after every
+        iteration with the loop carry as live arrays — the hook
+        runtime/ft.LoopRunner snapshots through CheckpointManager.
+
+        ``loop_state`` maps loop_idx → (iteration, {carry: array}) and
+        fast-forwards the matching loop: nodes before it re-execute
+        (pure and deterministic from the same inputs), the carry is
+        restored, and iteration continues from there.  A resumed run is
+        bit-identical to an uninterrupted stepwise run because both
+        execute the exact same per-iteration body computations on the
+        same carry values.  Loop indices follow plan.seq_loops()."""
         env = self.prepare_env(inputs)
-        self.execute(env, salts=collect_salts(
-            self.plan, env, self.selector, self.config.skew_salting))
+        salts = collect_salts(self.plan, env, self.selector,
+                              self.config.skew_salting)
+        ctx = ExecContext(salts=salts)
+        loop_state = dict(loop_state or {})
+        li = 0
+        for node in P.flatten(self.plan):
+            if not isinstance(node, P.SeqLoop):
+                self.executor.execute([node], env, ctx)
+                continue
+            it = 0
+            st = loop_state.get(li)
+            if st is not None:
+                it, carry = st
+                for c in node.carry:
+                    env[c] = jnp.asarray(carry[c])
+            while bool(self.executor.eval_scalar(node.cond, env)):
+                F.site("lower.loop_iter", loop=li, iteration=it)
+                self.executor.execute(node.body, env, ctx)
+                it += 1
+                if observer is not None:
+                    observer(li, it, {c: env[c] for c in node.carry})
+            li += 1
         return {n: env[n] for n in self.program.outputs}
 
     # ---- batchable entry (serving layer, DESIGN.md §10) ----

@@ -456,6 +456,16 @@ def flatten(nodes) -> list:
     return out
 
 
+def seq_loops(nodes) -> list:
+    """(index, SeqLoop) for every top-level sequential loop in execution
+    order, FusedRound containers opened — the stable loop numbering the
+    checkpoint/resume path keys carry snapshots by (DESIGN.md §11).
+    Nested SeqLoops are not enumerated: they execute inside their parent
+    loop's body and their state is covered by the parent's carry."""
+    return [(i, n) for i, n in enumerate(
+        n for n in flatten(nodes) if isinstance(n, SeqLoop))]
+
+
 def is_reduce(node: PlanNode) -> bool:
     return isinstance(node, REDUCE_NODES) or (
         isinstance(node, Fused)

@@ -1,3 +1,3 @@
-from .ft import TrainRunner
+from .ft import LoopRunner, TrainRunner
 
-__all__ = ["TrainRunner"]
+__all__ = ["LoopRunner", "TrainRunner"]

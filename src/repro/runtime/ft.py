@@ -72,3 +72,63 @@ class TrainRunner:
                               extra={"data": self.data.state()})
         self.mgr.wait()
         return metrics
+
+
+class LoopRunner:
+    """Mid-loop checkpoint/resume for ITERATIVE PLANS (DESIGN.md §11) —
+    the TrainRunner idiom applied to the core executor's SeqLoops.
+
+    Drives ``CompiledProgram.run_stepwise`` (host-driven loops) and
+    snapshots every loop carry through CheckpointManager every ``every``
+    iterations, keyed ``loop<i>/<carry-name>`` with the iteration count in
+    the checkpoint metadata.  A plan killed at iteration k (crash, or an
+    injected ``lower.loop_iter`` fault) restarts with ``resume=True``:
+    nodes before the loop re-execute (pure + deterministic), the carry is
+    restored from the latest snapshot, and the final outputs are
+    BIT-IDENTICAL to an uninterrupted stepwise run — both execute the
+    exact same per-iteration body computations on the same carry values
+    (npz array round-trips are exact).  Per-iteration wall times feed the
+    program's straggler watchdog (`explain_faults()`)."""
+
+    def __init__(self, cp, ckpt_dir: str, every: int = 1, keep: int = 3,
+                 async_write: bool = False):
+        self.cp = cp
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep,
+                                     async_write=async_write)
+        self.every = int(every)
+        self.saves = 0
+        self.resumed_from = None       # checkpoint step of the last resume
+        self._step = 0
+        self._t_last = 0.0
+
+    def run(self, inputs: dict, resume: bool = True) -> dict:
+        loop_state = None
+        self.resumed_from = None
+        if resume:
+            latest = self.mgr.latest()
+            if latest is not None:
+                step, flat, extra = self.mgr.restore_flat(latest)
+                loop_state = {}
+                for li_s, it in (extra.get("loops") or {}).items():
+                    li = int(li_s)
+                    carry = {k.split("/", 1)[1]: v for k, v in flat.items()
+                             if k.startswith(f"loop{li}/")}
+                    loop_state[li] = (int(it), carry)
+                self.resumed_from = step
+                self._step = step
+        self._t_last = time.perf_counter()
+        out = self.cp.run_stepwise(inputs, loop_state=loop_state,
+                                   observer=self._observer)
+        self.mgr.wait()
+        return out
+
+    def _observer(self, li, it, carry):
+        self._step += 1
+        now = time.perf_counter()
+        self.cp.faults.note_time(f"loop{li}.iter", now - self._t_last)
+        self._t_last = now
+        if self.every and it % self.every == 0:
+            self.mgr.save(self._step,
+                          {f"loop{li}/{c}": v for c, v in carry.items()},
+                          extra={"loops": {str(li): int(it)}})
+            self.saves += 1

@@ -1,5 +1,5 @@
-from .plans import PlanServer, PlanTicket
+from .plans import DeadlineExceeded, PlanServer, PlanTicket, QueueFull
 from .step import make_decode_step, make_prefill_step
 
-__all__ = ["PlanServer", "PlanTicket", "make_prefill_step",
-           "make_decode_step"]
+__all__ = ["DeadlineExceeded", "PlanServer", "PlanTicket", "QueueFull",
+           "make_prefill_step", "make_decode_step"]

@@ -39,6 +39,20 @@ import numpy as np
 
 import jax
 
+from ..core import faults as F
+
+
+class QueueFull(RuntimeError):
+    """Admission refused: the server-wide queue cap is reached.  Raised
+    from submit() BEFORE a ticket exists — a shed request is never
+    admitted, so the ledger invariant (admitted = completed + cancelled +
+    failed + queued) is untouched; the shed is counted in stats()."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed while it was still queued: it is
+    shed before pad/stack/flush ever spends work on it."""
+
 
 def _bucket_len(n: int, floor: int) -> int:
     """Bucket edge for a row count: next power of two, at least `floor`.
@@ -70,15 +84,16 @@ class PlanTicket:
     failed.  `result()` blocks (real-clock servers run a pump thread);
     deterministic tests drain() the server instead and read `output`."""
 
-    __slots__ = ("rid", "program", "cin", "bucket", "t_submit", "state",
-                 "output", "error", "_event", "_completions")
+    __slots__ = ("rid", "program", "cin", "bucket", "t_submit", "deadline",
+                 "state", "output", "error", "_event", "_completions")
 
-    def __init__(self, rid, program, cin, bucket, t_submit):
+    def __init__(self, rid, program, cin, bucket, t_submit, deadline=None):
         self.rid = rid
         self.program = program
         self.cin = cin                 # canonicalized inputs (numpy)
         self.bucket = bucket
         self.t_submit = t_submit
+        self.deadline = deadline       # absolute clock time, or None
         self.state = "queued"
         self.output = None
         self.error = None
@@ -113,7 +128,7 @@ class _Bucket:
     __slots__ = ("key", "cp", "program", "label", "static", "bag_pads",
                  "arr_pads", "limit_bags", "limit_arrays", "tickets",
                  "flushes", "reqs", "traced", "hits", "real_lanes", "lanes",
-                 "pad_rows", "bag_rows")
+                 "pad_rows", "bag_rows", "failed_flushes")
 
     def __init__(self, key, cp, program, label, static, bag_pads, arr_pads):
         self.key = key
@@ -134,6 +149,7 @@ class _Bucket:
         self.lanes = 0                     # vmap lanes dispatched (≥ real)
         self.pad_rows = 0                  # padded bag rows
         self.bag_rows = 0                  # total bag rows dispatched
+        self.failed_flushes = 0            # batched calls that raised
 
     def occ(self) -> float:
         return 100.0 * self.real_lanes / self.lanes if self.lanes else 0.0
@@ -167,7 +183,9 @@ class PlanServer:
     def __init__(self, programs: dict, *, max_batch: int = 8,
                  flush_ms: float = 2.0, bucket_floor: int = 8,
                  batch_round: bool = True, clock=None, prefetch: bool = True,
-                 sequential_fallback: bool = True):
+                 sequential_fallback: bool = True, deadline_ms: float = None,
+                 queue_cap: int = None, nan_guard: bool = True,
+                 bisect: bool = True):
         self._programs = dict(programs)
         self.max_batch = int(max_batch)
         self.flush_s = float(flush_ms) / 1e3
@@ -175,6 +193,14 @@ class PlanServer:
         self.batch_round = bool(batch_round)
         self.prefetch = bool(prefetch)
         self.sequential_fallback = bool(sequential_fallback)
+        # robustness knobs (DESIGN.md §11): default request deadline (per
+        # request override in submit()), server-wide admission cap, per-lane
+        # non-finite output guard, and failed-batch bisection
+        self.deadline_s = None if deadline_ms is None \
+            else float(deadline_ms) / 1e3
+        self.queue_cap = None if queue_cap is None else int(queue_cap)
+        self.nan_guard = bool(nan_guard)
+        self.bisect = bool(bisect)
         self._clock = clock if clock is not None else time.monotonic
         self._lock = threading.RLock()
         self._buckets: dict = {}           # key → _Bucket (insertion order)
@@ -188,6 +214,19 @@ class PlanServer:
         self.cancelled = 0
         self.failed = 0
         self.seq_fallbacks = 0
+        self.load_shed = 0                 # admissions refused (queue cap)
+        self.deadline_expired = 0          # queued requests shed at deadline
+        self.failed_flushes = 0            # batched calls that raised
+        self.bisections = 0                # failed batches split in half
+        self.poisoned = 0                  # lanes failed by the nan guard
+        # failure policy (DESIGN.md §11): server-level ledger on the
+        # injected clock; with a fake clock, retry backoff never really
+        # sleeps — tests replay schedules deterministically
+        self.faults = F.FaultLedger("serve")
+        self.faults.clock = self._clock
+        if clock is not None:
+            self.faults.sleep = lambda s: None
+        self.policy = F.RetryPolicy()
         self._thread = None
         self._stop = None
 
@@ -195,18 +234,32 @@ class PlanServer:
     # admission
     # ------------------------------------------------------------------
 
-    def submit(self, program: str, inputs: dict) -> PlanTicket:
+    def submit(self, program: str, inputs: dict, *,
+               deadline_ms: float = None) -> PlanTicket:
         """Admit one invocation: canonicalize host-side, bucket by the
         padded compile-cache signature, enqueue.  Never blocks and never
-        touches the device."""
+        touches the device.  Raises QueueFull (no ticket, load-shed
+        counted) when the server-wide admission cap is reached;
+        `deadline_ms` (or the server default) arms a deadline after which
+        the still-queued request is shed before any pad/flush work."""
         cp = self._programs[program]
         cin = cp.canonical_inputs(inputs)
         with self._lock:
+            if self.queue_cap is not None:
+                queued = sum(len(b.tickets) for b in self._buckets.values())
+                if queued >= self.queue_cap:
+                    self.load_shed += 1
+                    raise QueueFull(
+                        f"queue cap {self.queue_cap} reached "
+                        f"({self.load_shed} shed so far)")
             b = self._bucket_for(program, cp, cin)
             now = self._clock()
             if self._t0 is None:
                 self._t0 = now
-            t = PlanTicket(self._next_rid, program, cin, b, now)
+            dl_s = float(deadline_ms) / 1e3 if deadline_ms is not None \
+                else self.deadline_s
+            t = PlanTicket(self._next_rid, program, cin, b, now,
+                           deadline=None if dl_s is None else now + dl_s)
             self._next_rid += 1
             b.tickets.append(t)
             self.admitted += 1
@@ -310,10 +363,33 @@ class PlanServer:
         with self._lock:
             while True:
                 now = self._clock()
+                self._shed_expired(now)
                 key = self._next_ready(now, force=force)
                 if key is None:
                     return done
                 done += self._flush(self._buckets[key], force)
+
+    def _shed_expired(self, now) -> None:
+        """Deadline shedding, BEFORE pad/stack/flush: queued requests
+        whose deadline passed fail with DeadlineExceeded and never cost a
+        lane.  A staged prefetch whose ticket set changed is dropped."""
+        for b in self._buckets.values():
+            if not any(tk.deadline is not None and now >= tk.deadline
+                       for tk in b.tickets):
+                continue
+            keep = deque()
+            while b.tickets:
+                tk = b.tickets.popleft()
+                if tk.deadline is not None and now >= tk.deadline:
+                    tk._resolve("failed", error=DeadlineExceeded(
+                        f"request {tk.rid} shed after "
+                        f"{(now - tk.t_submit) * 1e3:.1f}ms in queue"))
+                    self.failed += 1
+                    self.deadline_expired += 1
+                else:
+                    keep.append(tk)
+            b.tickets = keep
+            self._staged.pop(b.key, None)
 
     # ------------------------------------------------------------------
     # flush: stack → device_put → one batched XLA call → unstack
@@ -356,52 +432,89 @@ class PlanServer:
             else:
                 arrays[name] = np.stack(
                     [np.asarray(tk.cin[name]) for tk in lanes])
+        # poisonable injection point: the stacked batch is mutable numpy
+        # here, one lane per request — a rid-matched poison spec NaNs
+        # exactly its request's lane (the nan guard must then isolate it)
+        F.site("serve.stack", program=b.program,
+               rids=[tk.rid for tk in lanes], arrays=arrays)
         return Bp, arrays, lengths
+
+    def _device_put(self, tree):
+        F.site("serve.device_put")
+        return jax.device_put(tree)
 
     def _stage(self, b: _Bucket):
         """Prefetch: stack the bucket's next flush and start its
         host→device transfer now, while the in-flight computation still
-        runs.  Consumed by _flush when the ticket set matches."""
+        runs.  Consumed by _flush when the ticket set matches.  Purely an
+        overlap optimization — a fault here just skips the prefetch; the
+        flush restacks and meets the fault on its own dispatch path."""
         take = list(b.tickets)[:self.max_batch]
         if not take:
             return
-        Bp, arrays, lengths = self._stack(b, take)
-        dev = jax.device_put((arrays, lengths))
+        try:
+            Bp, arrays, lengths = self._stack(b, take)
+            dev = self._device_put((arrays, lengths))
+        except Exception:                  # noqa: BLE001 — optimization only
+            return
         self._staged[b.key] = (tuple(t.rid for t in take), Bp, dev)
+
+    def _call_batch(self, b: _Bucket, take, Bp, arrays, lengths):
+        """One batched XLA call under the failure policy: transients retry
+        at this level (batch intact); anything else raises to _dispatch,
+        which bisects the batch.  The wall time feeds the straggler
+        watchdog."""
+        rids = tuple(tk.rid for tk in take)
+
+        def attempt():
+            F.site("serve.batched_call", program=b.program, rids=rids)
+            return b.cp.batched_call((b.key, Bp), b.static, arrays, lengths,
+                                     b.limit_bags, b.limit_arrays)
+
+        t0 = self._clock()
+        out = F.run_with_retries(attempt, policy=self.policy,
+                                 ledger=self.faults, label=f"batch[{Bp}]")
+        self.faults.note_time(f"batch[{Bp}]", self._clock() - t0)
+        return out
 
     def _flush(self, b: _Bucket, force: bool) -> int:
         take = [b.tickets.popleft()
                 for _ in range(min(self.max_batch, len(b.tickets)))]
         if not take:
             return 0
-        staged = self._staged.pop(b.key, None)
-        if staged is not None and staged[0] == tuple(t.rid for t in take):
-            Bp, (arrays, lengths) = staged[1], staged[2]
-        else:
-            Bp, arrays, lengths = self._stack(b, take)
-            arrays, lengths = jax.device_put((arrays, lengths))
+        return self._dispatch(b, take, force, staged_ok=True)
+
+    def _dispatch(self, b: _Bucket, take, force, staged_ok) -> int:
+        """Serve `take` as ONE batched call.  Success accounting happens
+        ONLY here on the success path (failed flushes must not inflate
+        served lanes/occupancy/latency — they get their own counters); a
+        failed call descends to _resolve_failed_batch (bisection)."""
         trace0 = b.cp.trace_count
-        out = err = None
         try:
-            out = b.cp.batched_call((b.key, Bp), b.static, arrays, lengths,
-                                    b.limit_bags, b.limit_arrays)
-        except Exception as ex:            # noqa: BLE001 — fallback path
-            err = ex
-        if out is not None:
-            if b.cp.trace_count > trace0:
-                b.traced += 1
+            staged = self._staged.pop(b.key, None) if staged_ok else None
+            if staged is not None \
+                    and staged[0] == tuple(t.rid for t in take):
+                Bp, (arrays, lengths) = staged[1], staged[2]
             else:
-                b.hits += 1
-            # overlap: start the NEXT ready bucket's host→device transfer
-            # while this (asynchronously dispatched) computation runs
-            if self.prefetch:
-                nk = self._next_ready(self._clock(), force=force)
-                if nk is not None and nk not in self._staged:
-                    self._stage(self._buckets[nk])
-            host = {n: np.asarray(v) for n, v in out.items()}
+                Bp, arrays, lengths = self._stack(b, take)
+                arrays, lengths = self._device_put((arrays, lengths))
+            out = self._call_batch(b, take, Bp, arrays, lengths)
+        except Exception as ex:            # noqa: BLE001 — ladder descent
+            b.failed_flushes += 1
+            self.failed_flushes += 1
+            return self._resolve_failed_batch(b, take, force, ex)
+        if b.cp.trace_count > trace0:
+            b.traced += 1
+        else:
+            b.hits += 1
+        # overlap: start the NEXT ready bucket's host→device transfer
+        # while this (asynchronously dispatched) computation runs
+        if self.prefetch:
+            nk = self._next_ready(self._clock(), force=force)
+            if nk is not None and nk not in self._staged:
+                self._stage(self._buckets[nk])
+        host = {n: np.asarray(v) for n, v in out.items()}
         b.flushes += 1
-        b.reqs += len(take)
-        b.real_lanes += len(take)
         b.lanes += Bp
         for tk in take:
             for bag, L in b.bag_pads.items():
@@ -411,20 +524,50 @@ class PlanServer:
         now = self._clock()
         self._t_last = now
         for i, tk in enumerate(take):
-            if out is None:
-                self._complete_fallback(tk, err, now)
-                continue
-            res = {}
+            res, finite = {}, True
             for n, v in host.items():
                 lane = v[i]
                 want = tuple(np.shape(tk.cin[n]))
                 if lane.shape != want:
                     lane = lane[tuple(slice(0, s) for s in want)]
                 res[n] = lane
+                if self.nan_guard \
+                        and np.issubdtype(lane.dtype, np.floating) \
+                        and not np.all(np.isfinite(lane)):
+                    finite = False
+            if not finite:
+                # per-lane poison isolation: only THIS request fails; its
+                # batchmates' lanes are untouched and complete right here
+                tk._resolve("failed", error=F.PoisonedOutput(
+                    f"request {tk.rid}: non-finite values in output"))
+                self.failed += 1
+                self.poisoned += 1
+                continue
             tk._resolve("done", output=res)
+            b.reqs += 1
+            b.real_lanes += 1
             self.completed += 1
             self._lat.append(now - tk.t_submit)
         return len(take)
+
+    def _resolve_failed_batch(self, b: _Bucket, take, force, err) -> int:
+        """A batched call failed after retries.  With one request there is
+        nothing left to split: serve it through the sequential fallback
+        (or fail it).  Otherwise BISECT: each half re-dispatches as its
+        own batched call, so one poisoned request ends up failing alone in
+        O(log B) extra calls while every other request still completes
+        batched — never the all-sequential stampede."""
+        if len(take) == 1 or not self.bisect:
+            now = self._clock()
+            self._t_last = now
+            for tk in take:
+                self._complete_fallback(tk, err, now)
+            return len(take)
+        self.bisections += 1
+        mid = len(take) // 2
+        done = self._dispatch(b, take[:mid], force, staged_ok=False)
+        done += self._dispatch(b, take[mid:], force, staged_ok=False)
+        return done
 
     def _complete_fallback(self, tk, err, now):
         """Batched trace failed: serve this request alone through the
@@ -509,6 +652,12 @@ class PlanServer:
                 "cancelled": self.cancelled, "failed": self.failed,
                 "queued": queued,
                 "seq_fallbacks": self.seq_fallbacks,
+                "load_shed": self.load_shed,
+                "deadline_expired": self.deadline_expired,
+                "failed_flushes": self.failed_flushes,
+                "bisections": self.bisections,
+                "poisoned": self.poisoned,
+                "retries": self.faults.counters["retry"],
                 "flushes": sum(b.flushes for b in self._buckets.values()),
                 "batch_traced": sum(b.traced
                                     for b in self._buckets.values()),
@@ -549,4 +698,14 @@ class PlanServer:
         out.append(f"whole-program cache: {s['batch_traced']} batch "
                    f"signatures traced, {s['batch_hits']} hits, "
                    f"{s['seq_fallbacks']} sequential fallbacks")
+        out.append(f"robustness: load_shed={s['load_shed']} "
+                   f"deadline_expired={s['deadline_expired']} "
+                   f"failed_flushes={s['failed_flushes']} "
+                   f"bisections={s['bisections']} "
+                   f"poisoned={s['poisoned']} retries={s['retries']}")
         return "\n".join(out)
+
+    def explain_faults(self) -> str:
+        """The serving layer's failure ledger (retries, stragglers) —
+        the per-program ladders live on each CompiledProgram."""
+        return self.faults.explain()

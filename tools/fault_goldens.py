@@ -1,0 +1,103 @@
+"""Render failure-ledger goldens for the chaos CI artifact.
+
+Drives the compiled group_by program and a small PlanServer through one
+scripted scenario per degradation-ladder level (DESIGN.md §11) and
+writes every ``explain_faults()`` / ``explain_serving()`` rendering to
+the path given on the command line.  The artifact makes ledger-text
+regressions diffable across CI runs without re-running the job.
+
+  PYTHONPATH=src python tools/fault_goldens.py FAULT_ledgers.txt
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+
+def _inputs(seed=0, n=40):
+    r = np.random.default_rng(seed)
+    return dict(S=(r.integers(0, 10, n).astype(np.float64),
+                   r.standard_normal(n)), C=np.zeros(10))
+
+
+def _fresh_cp():
+    from repro.core import compile_program
+    from repro.core.programs import ALL
+    return compile_program(ALL["group_by"])
+
+
+def scenarios():
+    from repro.core import faults as F
+
+    def clean():
+        cp = _fresh_cp()
+        cp.run(_inputs())
+        return cp.explain_faults()
+
+    def transient_retry():
+        cp = _fresh_cp()
+        cp.faults.sleep = lambda s: None
+        with F.inject(F.FaultSpec("lower.whole_trace", "transient", nth=1)):
+            cp.run(_inputs())
+        return cp.explain_faults()
+
+    def deterministic_descent():
+        cp = _fresh_cp()
+        cp.faults.sleep = lambda s: None
+        with F.inject(F.FaultSpec("lower.whole_trace", "deterministic",
+                                  nth=1)):
+            cp.run(_inputs())
+        return cp.explain_faults()
+
+    def interp_oracle():
+        cp = _fresh_cp()
+        cp.faults.sleep = lambda s: None
+        with F.inject(F.FaultSpec("lower.node", "transient", nth=1,
+                                  times=10 ** 4)):
+            cp.run(_inputs())
+        return cp.explain_faults()
+
+    def serve_chaos():
+        from repro.serve import PlanServer
+        srv = PlanServer({"group_by": _fresh_cp()}, max_batch=8)
+        srv.faults.sleep = lambda s: None
+        srv.policy.backoff_s = 0.0
+        specs = [F.FaultSpec("serve.batched_call", "transient", nth=1),
+                 F.FaultSpec("serve.batched_call", "deterministic",
+                             rid=3, times=10 ** 4),
+                 F.FaultSpec("serve.stack", "poison", rid=5,
+                             times=10 ** 4)]
+        ts = [srv.submit("group_by", _inputs(i)) for i in range(8)]
+        with F.inject(*specs):
+            srv.drain()
+        states = ",".join(t.state for t in ts)
+        return (srv.explain_serving() + "\n" + srv.explain_faults()
+                + f"\nticket states: {states}")
+
+    return [("clean run (no faults)", clean),
+            ("transient at lower.whole_trace: retried in place",
+             transient_retry),
+            ("deterministic at lower.whole_trace: one descent to eager",
+             deterministic_descent),
+            ("persistent transient at lower.node: interpreter oracle",
+             interp_oracle),
+            ("serve chaos: retry + bisection + poisoned lane",
+             serve_chaos)]
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else "FAULT_ledgers.txt"
+    chunks = []
+    for title, fn in scenarios():
+        chunks.append(f"=== {title} ===\n{fn()}\n")
+    text = "\n".join(chunks)
+    with open(out, "w") as f:
+        f.write(text)
+    print(text)
+    print(f"[fault_goldens] wrote {out}")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, "src")
+    main()
