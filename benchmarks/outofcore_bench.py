@@ -1,0 +1,142 @@
+"""Out-of-core streaming cost model (DESIGN.md §12): what does the
+capacity tier cost when it actually fires?
+
+For pagerank (1M edges) and word_count (1M words) the bench compiles the
+same program three ways — all-resident, and with a simulated device
+budget the input bag overflows 2× and 10× — and times run() for each.
+The budgeted runs admit through the memory estimator, stream the bag in
+power-of-two tiles chosen from the budget, and must return the SAME
+bits as the all-resident reference (asserted, not measured: stepwise for
+looped programs, run() for loop-free ones — see test_outofcore.py for
+why the jitted while_loop differs by an FMA).
+
+Emitted as BENCH_outofcore.json via ``benchmarks.run --sections
+outofcore``; --check gates the 10×-over-budget run at ≤ `gate` × the
+all-resident wall time (re-measured once on failure — CPU timer noise,
+not a real regression, is the common cause at these sizes).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+RATIOS = (2, 10)           # bag bytes = ratio × the simulated budget
+REPEATS = 3
+PR_N, PR_EDGES = 4096, 1 << 20
+WC_KEYS, WC_WORDS = 4096, 1 << 20
+PR_STEPS = 3.0
+
+
+def _pr_inputs():
+    r = np.random.default_rng(0)
+    return dict(E=(r.integers(0, PR_N, PR_EDGES).astype(np.int32),
+                   r.integers(0, PR_N, PR_EDGES).astype(np.int32)),
+                P=np.full(PR_N, 1.0 / PR_N, np.float32),
+                NP=np.zeros(PR_N, np.float32),
+                C=np.zeros(PR_N, np.float32),
+                N=PR_N, num_steps=PR_STEPS, steps=0.0, b=0.85)
+
+
+def _wc_inputs():
+    r = np.random.default_rng(1)
+    return dict(W=(r.integers(0, WC_KEYS, WC_WORDS).astype(np.int32),),
+                C=np.zeros(WC_KEYS, np.float32))
+
+
+def _best(f, repeats=REPEATS) -> float:
+    f()                                       # warmup: traces + caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        f()
+        best = min(best, time.monotonic() - t0)
+    return best
+
+
+def _bitident(a, b) -> bool:
+    return all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+               for k in a)
+
+
+def _measure(name: str, inputs: dict, bag: str, looped: bool) -> dict:
+    from repro.core import compile_program
+    from repro.core.programs import ALL
+    cp = compile_program(ALL[name], op_select="force:scatter")
+    est = cp.estimate_memory(inputs)
+    t_res = _best(lambda: cp.run(dict(inputs)))
+    # the bit-identity reference: host-driven stepwise for looped
+    # programs (the chunked executor's contract), run() otherwise
+    ref = cp.run_stepwise(dict(inputs)) if looped else cp.run(dict(inputs))
+    row = {"program": name, "bag_rows": est._bag_rows[bag],
+           "bag_bytes": est.bag_bytes[bag],
+           "est_peak_bytes": est.peak_bytes,
+           "all_resident_s": round(t_res, 4), "budgets": []}
+    for ratio in RATIOS:
+        budget = est.fixed_bytes + est.bag_bytes[bag] // ratio
+        cc = compile_program(ALL[name], op_select="force:scatter",
+                             memory_budget=budget)
+        rows = cc._initial_chunk_rows(inputs)
+        out = cc.run(dict(inputs))
+        assert _bitident(ref, out), f"{name} at {ratio}x not bit-identical"
+        assert cc.faults.counters["admission"] >= 1
+        t_chunk = _best(lambda: cc.run(dict(inputs)))
+        row["budgets"].append({
+            "over_budget_x": ratio, "budget_bytes": budget,
+            "chunk_rows": rows,
+            "n_chunks": -(-est._bag_rows[bag] // rows),
+            "chunked_s": round(t_chunk, 4),
+            "slowdown_x": round(t_chunk / t_res, 3) if t_res > 0 else 0.0})
+    return row
+
+
+def rows() -> list:
+    return [_measure("pagerank", _pr_inputs(), "E", looped=True),
+            _measure("word_count", _wc_inputs(), "W", looped=False)]
+
+
+def print_rows(rws) -> None:
+    print("program,over_budget_x,chunk_rows,n_chunks,"
+          "all_resident_s,chunked_s,slowdown_x")
+    for r in rws:
+        for b in r["budgets"]:
+            print(f"{r['program']},{b['over_budget_x']},"
+                  f"{b['chunk_rows']},{b['n_chunks']},"
+                  f"{r['all_resident_s']},{b['chunked_s']},"
+                  f"{b['slowdown_x']}")
+
+
+def to_json(rws) -> dict:
+    import jax
+    return {"section": "outofcore", "unit": "seconds",
+            "platform": jax.default_backend(),
+            "ratios": list(RATIOS), "repeats": REPEATS,
+            "programs": rws}
+
+
+def check_rows(rws, gate: float = 2.5) -> bool:
+    """--check gate: streaming a bag 10× over budget must cost ≤ `gate` ×
+    the all-resident run (the tile amortizes per-chunk dispatch at these
+    sizes; worse means prefetch overlap or the tile choice regressed).
+    A failing program is re-measured once before judging — single-shot
+    wall times on shared CI runners are noisy."""
+    bad = False
+    for r in rws:
+        worst = max(r["budgets"], key=lambda b: b["slowdown_x"])
+        slow = worst["slowdown_x"]
+        if slow > gate:
+            fresh = _measure(r["program"],
+                             _pr_inputs() if r["program"] == "pagerank"
+                             else _wc_inputs(),
+                             "E" if r["program"] == "pagerank" else "W",
+                             looped=r["program"] == "pagerank")
+            slow = max(b["slowdown_x"] for b in fresh["budgets"])
+        if slow > gate:
+            print(f"[outofcore] GATE FAILED: {r['program']} chunked "
+                  f"{slow}x all-resident > {gate}x")
+            bad = True
+        else:
+            print(f"[outofcore] {r['program']} OK "
+                  f"({slow}x all-resident at "
+                  f"{worst['over_budget_x']}x over budget)")
+    return bad

@@ -36,6 +36,11 @@ Sections:
             overhead on pagerank; emits BENCH_faults.json; --check fails
             when goodput under 20%% faults drops below 0.5x fault-free
             or resume costs > 2x the uninterrupted run (chaos CI)
+  [outofcore] capacity-tier cost (DESIGN.md §12): pagerank + word_count
+            all-resident vs chunked streaming at 2x/10x over a simulated
+            device budget (bit-identity asserted); emits
+            BENCH_outofcore.json; --check fails when the 10x-over-budget
+            run costs > 2.5x the all-resident run (chaos CI)
 """
 from __future__ import annotations
 
@@ -113,11 +118,15 @@ def main() -> None:
     ap.add_argument("--faults-json-out", default=os.path.join(
         _REPO, "BENCH_faults.json"),
         help="faults artifact path ('' disables)")
+    ap.add_argument("--outofcore-json-out", default=os.path.join(
+        _REPO, "BENCH_outofcore.json"),
+        help="outofcore artifact path ('' disables)")
     args = ap.parse_args()
     sections = args.sections.split(",")
     if args.check and not {"fig3", "dist", "skew", "serve",
-                           "faults"} & set(sections):
-        ap.error("--check gates fig3, dist, skew, serve, and/or faults: "
+                           "faults", "outofcore"} & set(sections):
+        ap.error("--check gates fig3, dist, skew, serve, faults, "
+                 "and/or outofcore: "
                  "include one in --sections")
 
     if {"dist", "skew"} & set(sections):
@@ -361,6 +370,20 @@ def main() -> None:
                 json.dump(faults_bench.to_json(rows), f, indent=1)
             print(f"[faults] wrote {args.faults_json_out}")
         if args.check and faults_bench.check_rows(rows):
+            check_failed = True
+
+    if "outofcore" in sections:
+        from benchmarks import outofcore_bench
+        print("[outofcore] all-resident vs chunked streaming at 2x/10x "
+              "over a simulated device budget (DESIGN.md §12)")
+        rows = outofcore_bench.rows()
+        outofcore_bench.print_rows(rows)
+        print()
+        if args.outofcore_json_out:
+            with open(args.outofcore_json_out, "w") as f:
+                json.dump(outofcore_bench.to_json(rows), f, indent=1)
+            print(f"[outofcore] wrote {args.outofcore_json_out}")
+        if args.check and outofcore_bench.check_rows(rows):
             check_failed = True
 
     if check_failed:

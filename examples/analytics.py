@@ -34,6 +34,11 @@ def main():
     ins = dict(E=E, P=np.full(nvert, 1 / nvert), NP=np.zeros(nvert),
                C=np.zeros(nvert), N=nvert, num_steps=5.0, steps=0.0, b=0.85)
     cp = compile_program(pagerank)
+    # memory admission (DESIGN.md §12): the estimator prices the plan's
+    # peak device bytes BEFORE anything touches the device — over a
+    # budget, run() streams the edge bag in tiles instead of OOM-ing
+    est = cp.estimate_memory(ins)
+    print(est.summary(None))
     print(cp.explain())        # operator + inferred sharding per statement
     sharded = [a for a, d in cp.dists.items() if d >= Dist.ONED_ROW]
     print(f"\ndense arrays sharded (not replicated): {sorted(sharded)}\n")
@@ -63,8 +68,9 @@ def main():
                D=np.zeros((npts, K)), MinD=np.full(npts, 1e30),
                Cl=np.zeros(npts), SX=np.zeros(K), SY=np.zeros(K),
                CN=np.zeros(K), NX=np.zeros(K), NY=np.zeros(K))
-    out = compile_distributed(kmeans_step, mesh, ("data",),
-                              mode="gspmd").run(ins)
+    ck = compile_distributed(kmeans_step, mesh, ("data",), mode="gspmd")
+    print(ck.cp.estimate_memory(ins).summary(None))
+    out = ck.run(ins)
     print("kmeans new centroids x:",
           np.round(np.asarray(out["NX"]), 3).tolist())
 

@@ -14,11 +14,13 @@
 #   → distributed (shard_map / gspmd execution of the same plan over a mesh;
 #     bags AND inferred-ONED_ROW dense arrays shard as row blocks)
 from .analysis import check
+from .chunked import ChunkLoop, ChunkRunner, chunk_plan, choose_chunk_rows
 from .frontend import (bag, dim, intscalar, loop_program, map_, matrix,
                        parse_program, scalar, vector)
 from .interp import run as interpret
 from .loop_ast import Program, RejectionError
 from .lower import CompiledProgram, PlanExecutor, compile_program
+from .memest import MemEstimate, estimate, shape_env, shape_env_from_signature
 from .passes import PlanConfig, plan_program
 from .translate import translate
 
@@ -26,4 +28,6 @@ __all__ = ["loop_program", "parse_program", "compile_program", "interpret",
            "check", "translate", "CompiledProgram", "PlanExecutor",
            "PlanConfig", "plan_program", "Program",
            "RejectionError", "vector", "matrix", "map_", "bag", "dim",
-           "scalar", "intscalar"]
+           "scalar", "intscalar",
+           "MemEstimate", "estimate", "shape_env", "shape_env_from_signature",
+           "ChunkLoop", "ChunkRunner", "chunk_plan", "choose_chunk_rows"]

@@ -1,0 +1,430 @@
+"""Chunked out-of-core execution (DESIGN.md §12).
+
+The capacity tier of the degradation ladder: when a call's estimated
+peak (core/memest.py) exceeds the memory budget — or an all-resident
+attempt dies with a classified capacity error — the plan is rewritten
+so its bag-consuming nodes stream the bag through device-resident
+destination accumulators in fixed-size row tiles, the
+`kernels/flash_attention.py` streaming-accumulator idiom lifted from
+one Pallas kernel to the plan level:
+
+  * `chunk_plan` groups maximal runs of chunk-safe single-bag nodes
+    into `ChunkLoop`s — a `SeqLoop` subclass, so the loop inherits the
+    plan's explain/carry/checkpoint contracts (`plan.seq_loops`
+    enumerates it; `runtime/ft.LoopRunner` checkpoints its carry per
+    chunk with zero new code);
+  * `ChunkRunner` keeps the bag columns HOST-side (numpy), jits one
+    step function per loop+shape class with the destination dict
+    donated (peak device bytes = O(tile + dests)), and overlaps the
+    next tile's host→device transfer with the current step's async
+    dispatch (double-buffered prefetch);
+  * the tile rides the executor's existing pad/mask machinery
+    (`ExecContext.bag_offsets`/`bag_limits`, paper §3.4): the offset
+    globalizes the bag index var, the limit masks the zero-padded tail
+    of the last tile, so no node body changes at all.
+
+Bit-identity: the scatter backend of SegmentReduce ⊕-accumulates
+directly into the RUNNING destination (`dest.at[keys].add(val)`), so
+splitting the bag into tiles only reassociates the fold as
+`(((dest ⊕ t1) ⊕ t2) ⊕ …)` — the same left-fold, in the same row
+order, as the single all-resident scatter.  `chunk_plan` therefore
+pins grouped SegmentReduces to the scatter backend and disables
+hot-key salting inside chunk bodies (a [K,S] salted partial is folded
+per tile — a different association).  ScalarReduce chunks combine
+per-tile partials with ⊕ — exact for min/max, reassociated (allclose)
+for float +/*.
+
+Fault sites `lower.chunk_step` / `lower.chunk_prefetch` fire before
+every step dispatch and tile transfer; transients retry at chunk
+granularity, capacity errors propagate to the halving wrapper in
+`CompiledProgram._run_chunked`.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import faults as F
+from . import plan as P
+from .dist_analysis import aligned_reads, gathers_of
+
+__all__ = ["ChunkLoop", "chunk_plan", "choose_chunk_rows", "ChunkRunner",
+           "DEFAULT_CHUNK_ROWS"]
+
+DEFAULT_CHUNK_ROWS = 4096
+
+
+# ---------------------------------------------------------------------------
+# the plan node
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ChunkLoop(P.SeqLoop):
+    """Outer streaming loop over row tiles of one bag.  `cond` is None —
+    the trip count is ceil(rows/tile), known only at run time from the
+    concrete bag, so the ChunkRunner drives it host-side.  Reaching the
+    plain executor (e.g. the interp oracle's plan walk, or an
+    all-resident run of a chunked plan) degrades to simple sequencing of
+    the body with the whole bag as one tile — same results."""
+    chunk_bag: str = ""
+
+    def describe(self) -> str:
+        return (f"ChunkLoop(stream {self.chunk_bag} tiles, "
+                f"carry={','.join(self.carry)})")
+
+
+# ---------------------------------------------------------------------------
+# the chunking pass
+# ---------------------------------------------------------------------------
+
+_CHUNK_LEAVES = (P.SegmentReduce, P.Scatter, P.ScalarReduce, P.AxisReduce,
+                 P.MapExpr)
+
+
+def _bag_axis(node):
+    space = getattr(node, "space", None)
+    if space is None:
+        return None, None
+    bags = [a for a in space.axes if a.kind == "bag"]
+    if len(bags) != 1:
+        return None, None
+    return bags[0].bag, bags[0].var
+
+
+def _chunkable(node) -> bool:
+    """One bag axis, and every row tile's contribution ⊕-folds into the
+    destination independently of the other tiles."""
+    if isinstance(node, P.Fused):
+        return (_bag_axis(node)[0] is not None
+                and all(isinstance(p, _CHUNK_LEAVES) for p in node.parts))
+    if not isinstance(node, _CHUNK_LEAVES):
+        return False
+    bag, var = _bag_axis(node)
+    if bag is None:
+        return False
+    if isinstance(node, P.MapExpr) and not isinstance(node, P.AxisReduce):
+        # a store only chunks when each tile writes its own rows: the bag
+        # axis var must key the destination
+        if node.key_axes is None or var not in node.key_axes:
+            return False
+    return True
+
+
+def _reads_ok(node, gdests: set, bag_var: str) -> bool:
+    """May `node` join a group whose earlier members write `gdests`?
+    Only if every read of those still-accumulating destinations is
+    row-local (leading-indexed by the bag axis var): tile c reads only
+    rows tile c just wrote.  Any other read would observe a partial
+    fold."""
+    if not gdests:
+        return True
+    aligned = aligned_reads(node, bag_var)
+    gathered = set(gathers_of(node))
+    for name in gdests:
+        if name in gathered and name not in aligned:
+            return False
+        if name not in gathered and name in getattr(node, "reads", frozenset()):
+            return False              # scalar/whole-array read of a partial
+    return True
+
+
+def _pin_bit_identical(node):
+    """Copy a node for a chunk body, pinning choices that keep the tiled
+    fold bit-identical to the all-resident one (module docstring)."""
+    n2 = copy.copy(node)
+    if isinstance(n2, P.Fused):
+        n2.parts = [_pin_bit_identical(p) for p in node.parts]
+        return n2
+    if isinstance(n2, P.SegmentReduce):
+        if "scatter" in (n2.candidates or ()):
+            n2.backend = "scatter"
+        n2.salt = 1                   # no hot-key spreading inside a tile
+    return n2
+
+
+def _make_loop(group: list, bag: str) -> ChunkLoop:
+    body = [_pin_bit_identical(n) for n in group]
+    carry: list = []
+    for n in group:
+        for d in P.dests_of(n):
+            if d not in carry:
+                carry.append(d)
+    reads = frozenset().union(*(getattr(n, "reads", frozenset())
+                                for n in group))
+    return ChunkLoop(stmt=group[0].stmt, space=group[0].space,
+                     reads=reads, cond=None, body=body,
+                     carry=tuple(carry), chunk_bag=bag)
+
+
+def chunk_plan(nodes, prog=None):
+    """Rewrite a plan so bag-consuming nodes stream: returns
+    (new_plan, n_chunk_loops).  Non-bag nodes and unchunkable shapes run
+    all-resident between the streaming loops — correctness never depends
+    on a node being grouped, only peak memory does."""
+    out: list = []
+    nloops = 0
+    group: list = []
+    gbag = gvar = None
+    gdests: set = set()
+
+    def flush():
+        nonlocal group, gbag, gvar, gdests, nloops
+        if group:
+            out.append(_make_loop(group, gbag))
+            nloops += 1
+        group, gbag, gvar, gdests = [], None, None, set()
+
+    for n in P.flatten(nodes):
+        if isinstance(n, P.SeqLoop):
+            flush()
+            body2, k = chunk_plan(n.body, prog)
+            if k:
+                n2 = copy.copy(n)
+                n2.body = body2
+                out.append(n2)
+                nloops += k
+            else:
+                out.append(n)
+            continue
+        if _chunkable(n):
+            bag, var = _bag_axis(n)
+            # a second writer of a group destination must NOT interleave
+            # with the first at tile granularity: the all-resident fold
+            # finishes one node's contributions before the next begins
+            same_dest = any(d in gdests for d in P.dests_of(n))
+            if group and (bag != gbag or same_dest
+                          or not _reads_ok(n, gdests, gvar)):
+                flush()
+            if not group:
+                gbag, gvar = bag, var
+            group.append(n)
+            gdests.update(P.dests_of(n))
+        else:
+            flush()
+            out.append(n)
+    flush()
+    return out, nloops
+
+
+# ---------------------------------------------------------------------------
+# chunk sizing
+# ---------------------------------------------------------------------------
+
+def choose_chunk_rows(est, budget: int, n_rows: int | None = None) -> int:
+    """Largest power-of-two tile with fixed + rows·per_row ≤ budget
+    (per_row already charges two tiles for the prefetch double buffer)."""
+    per = max(1, est.per_row())
+    avail = int(budget) - est.fixed_bytes
+    if avail <= per:
+        rows = 1
+    else:
+        rows = 1 << (int(avail // per).bit_length() - 1)
+    if n_rows:
+        rows = min(rows, int(n_rows))
+    return max(1, rows)
+
+
+# ---------------------------------------------------------------------------
+# the runner
+# ---------------------------------------------------------------------------
+
+class ChunkRunner:
+    """Executes the chunked form of a CompiledProgram's plan.  Bags stay
+    host-side numpy; everything else follows prepare_env.  One jitted
+    step function per (ChunkLoop, tile/shape class), destinations
+    donated across chunks."""
+
+    def __init__(self, cp):
+        self.cp = cp
+        self._plan = None
+        self._nloops = 0
+        self._step_cache: dict = {}
+        self.last_chunk_rows: int | None = None
+        self.chunks_run = 0
+
+    @property
+    def plan(self):
+        if self._plan is None:
+            self._plan, self._nloops = chunk_plan(self.cp.plan,
+                                                  self.cp.program)
+        return self._plan
+
+    @property
+    def n_chunk_loops(self) -> int:
+        _ = self.plan
+        return self._nloops
+
+    def explain(self) -> str:
+        return P.explain(self.plan, name=f"{self.cp.program.name} [chunked]",
+                         decisions=self.cp.executor.decisions)
+
+    # ---- env ----
+    def prepare_env(self, inputs: dict) -> dict:
+        env = {}
+        for name, t in self.cp.program.params.items():
+            v = inputs[name]
+            if t.kind == "dim":
+                env[name] = int(v)
+            elif t.kind == "bag":
+                cols = v if isinstance(v, tuple) else (v,)
+                # numpy mirror of prepare_env's device placement: same
+                # canonicalized dtypes, so tiles match all-resident bits
+                env[name] = tuple(
+                    np.asarray(c, jax.dtypes.canonicalize_dtype(
+                        np.asarray(c).dtype)) for c in cols)
+            elif t.kind in ("vector", "matrix", "map"):
+                env[name] = jnp.asarray(
+                    v, jnp.float32 if t.dtype == "float" else jnp.int32)
+            else:
+                env[name] = jnp.asarray(v)
+        return env
+
+    # ---- driving ----
+    def run(self, inputs: dict, *, chunk_rows: int,
+            observer=None, loop_state=None) -> dict:
+        """Same contract as CompiledProgram.run / run_stepwise: observer
+        (when given) fires per top-level loop iteration — per CHUNK for a
+        ChunkLoop — and `loop_state` fast-forwards both loop kinds, which
+        is what makes LoopRunner resume chunk-granular."""
+        env = self.prepare_env(inputs)
+        self.last_chunk_rows = int(chunk_rows)
+        li = 0
+        for node in self.plan:
+            if isinstance(node, ChunkLoop):
+                st = (loop_state or {}).get(li)
+                self._stream(node, env, chunk_rows, li=li,
+                             observer=observer, state=st)
+                li += 1
+            elif isinstance(node, P.SeqLoop):
+                st = (loop_state or {}).get(li)
+                self._host_loop(node, env, chunk_rows, li=li,
+                                observer=observer, state=st)
+                li += 1
+            else:
+                self._resident(node, env)
+        return {n: env[n] for n in self.cp.program.outputs}
+
+    def _resident(self, node, env):
+        from .lower import _EMPTY_CTX
+        self.cp.executor.execute([node], env, _EMPTY_CTX)
+
+    def _host_loop(self, node, env, chunk_rows, *, li, observer, state):
+        """A SeqLoop whose body streams: host-driven (the chunk loop
+        inside cannot live in a lax.while_loop), checkpointed per
+        ITERATION exactly like run_stepwise's host-driven loops."""
+        ex = self.cp.executor
+        it = 0
+        if state is not None:
+            it, carry = state
+            for c in node.carry:
+                env[c] = jnp.asarray(carry[c])
+        while bool(ex.eval_scalar(node.cond, env)):
+            F.site("lower.loop_iter", loop=li, iteration=it)
+            for b in node.body:
+                if isinstance(b, ChunkLoop):
+                    self._stream(b, env, chunk_rows, li=None,
+                                 observer=None, state=None)
+                else:
+                    self._resident(b, env)
+            it += 1
+            if observer is not None:
+                observer(li, it, {c: env[c] for c in node.carry})
+
+    # ---- the stream ----
+    def _stream(self, node: ChunkLoop, env, chunk_rows, *, li,
+                observer, state):
+        bag = node.chunk_bag
+        cols = env[bag]
+        n = int(cols[0].shape[0]) if cols else 0
+        if n == 0:
+            return                     # ⊕ over an empty bag contributes identity
+        tile = max(1, min(int(chunk_rows), n))
+        nchunks = -(-n // tile)
+        start = 0
+        # fresh device copies: the step donates the dest dict every chunk,
+        # and jnp.asarray would alias a caller's jax array — donation must
+        # only ever consume our own streaming state
+        dests = {d: jnp.array(env[d], copy=True) for d in node.carry}
+        if state is not None:
+            start, carry = state
+            dests = {d: jnp.array(carry[d], copy=True) for d in node.carry}
+        step = self._step_fn(node, env, tile)
+
+        def tile_cols(c):
+            lo = c * tile
+            view = tuple(col[lo:lo + tile] for col in cols)
+            if view[0].shape[0] < tile:          # zero-pad the last tile;
+                pad = tile - view[0].shape[0]    # bag_limits masks the tail
+                view = tuple(np.concatenate(
+                    [v, np.zeros((pad,) + v.shape[1:], v.dtype)])
+                    for v in view)
+            return view
+
+        def prefetch(c):
+            def attempt():
+                F.site("lower.chunk_prefetch", loop=li, chunk=c)
+                return jax.device_put(tile_cols(c))
+            return F.run_with_retries(attempt, policy=self.cp.policy,
+                                      ledger=self.cp.faults,
+                                      label=f"prefetch[{bag}]")
+
+        nxt = prefetch(start) if start < nchunks else None
+        for c in range(start, nchunks):
+            cur, nxt = nxt, None
+
+            def attempt(c=c, cur=cur):
+                F.site("lower.chunk_step", loop=li, chunk=c)
+                return step(dests, cur, jnp.int32(c * tile), jnp.int32(n))
+
+            # dispatch is async: the step computes while the next tile
+            # crosses host→device (the double buffer)
+            new_dests = F.run_with_retries(attempt, policy=self.cp.policy,
+                                           ledger=self.cp.faults,
+                                           label=f"chunk[{bag}]")
+            if c + 1 < nchunks:
+                nxt = prefetch(c + 1)
+            dests = new_dests
+            self.chunks_run += 1
+            if observer is not None and li is not None:
+                observer(li, c + 1, dict(dests))
+        env.update(dests)
+
+    def _step_fn(self, node: ChunkLoop, env, tile: int):
+        from .lower import ExecContext
+        bag = node.chunk_bag
+        statics = {k: v for k, v in env.items() if isinstance(v, int)}
+        rest_names = sorted(
+            r for r in node.reads
+            if r in env and r != bag and r not in node.carry
+            and not isinstance(env[r], int))
+        rest = {r: env[r] for r in rest_names}
+
+        def sig(v):
+            return (tuple(jnp.shape(v)), str(jnp.asarray(v).dtype))
+
+        key = (id(node), tile, tuple(sorted(statics.items())),
+               tuple((d, sig(env[d])) for d in node.carry),
+               tuple((r, sig(rest[r])) for r in rest_names),
+               tuple((c.shape[1:], str(c.dtype)) for c in env[bag]))
+        fn = self._step_cache.get(key)
+        if fn is None:
+            body, carry, executor = node.body, node.carry, self.cp.executor
+
+            def traced(dests, tcols, off, lim, rest_args,
+                       _statics=dict(statics)):
+                e = dict(_statics)
+                e.update(rest_args)
+                e.update(dests)
+                e[bag] = tcols
+                ctx = ExecContext(bag_offsets={bag: off},
+                                  bag_limits={bag: lim})
+                executor.execute(body, e, ctx)
+                return {d: e[d] for d in carry}
+
+            fn = jax.jit(traced, donate_argnums=(0,))
+            self._step_cache[key] = fn
+        return lambda dests, tcols, off, lim: fn(dests, tcols, off, lim, rest)

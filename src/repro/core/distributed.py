@@ -1221,18 +1221,29 @@ class DistributedProgram:
 
     # ------------------------- entry -------------------------
     def run(self, inputs: dict) -> dict:
-        """Distributed ladder (DESIGN.md §11): fused → per-member rounds
-        (inside _run_once, via _fused_bail) → REP-everything placements →
-        the wrapped single-device program, whose own ladder ends at the
-        interpreter oracle.  Transients retry at each level first; a
-        deterministic error gets exactly ONE descent (REP-everything) and
-        surfaces if it reproduces there — it is a user error, and the
-        deeper levels would only mask it."""
+        """Distributed ladder (DESIGN.md §11/§12): fused → per-member
+        rounds (inside _run_once, via _fused_bail) → REP-everything
+        placements → the wrapped single-device program, whose own ladder
+        ends at the interpreter oracle.  Transients retry at each level
+        first; a deterministic error gets exactly ONE descent
+        (REP-everything) and surfaces if it reproduces there — it is a
+        user error, and the deeper levels would only mask it.
+
+        Capacity errors take a DIFFERENT exit: they must never ascend
+        the memory curve.  REP-everything replicates every dense array
+        (strictly MORE bytes per device than the sharded placement that
+        just OOMed) and single-device concentrates the whole input on
+        one device — both rungs are guaranteed re-OOMs.  A classified
+        capacity error therefore descends straight to the chunked
+        out-of-core tier (core/chunked.py, halving tiles on repeat), or
+        to single-device only when out_of_core="off"."""
         try:
             return F.run_with_retries(
                 lambda: self._run_once(inputs),
                 policy=self.policy, ledger=self.faults, label="dist")
         except Exception as ex:          # noqa: BLE001 — ladder descent
+            if F.classify(ex) == "capacity":
+                return self._descend_capacity("rounds", inputs, ex)
             self.faults.descend("rounds", "rep", ex)
             if F.classify(ex) == "deterministic":
                 out = self._run_once(inputs, force_rep=True)
@@ -1247,10 +1258,23 @@ class DistributedProgram:
             except Exception as ex2:     # noqa: BLE001 — ladder descent
                 if F.classify(ex2) == "deterministic":
                     raise
+                if F.classify(ex2) == "capacity":
+                    return self._descend_capacity("rep", inputs, ex2)
                 self.faults.descend("rep", "single-device", ex2)
                 out = self.cp.run(inputs)
                 self.faults.recover("single-device")
                 return out
+
+    def _descend_capacity(self, from_level: str, inputs: dict, ex) -> dict:
+        """Capacity exit: down the memory curve (DESIGN.md §12)."""
+        if self.cp.out_of_core != "off":
+            self.faults.descend(from_level, "chunked", ex)
+            out = self.cp._run_chunked(inputs, recovering=True)
+            return out
+        self.faults.descend(from_level, "single-device", ex)
+        out = self.cp.run(inputs)
+        self.faults.recover("single-device")
+        return out
 
     def _run_once(self, inputs: dict, force_rep: bool = False) -> dict:
         env = {}

@@ -30,6 +30,7 @@ substrate, split into three pieces every layer shares:
 """
 from __future__ import annotations
 
+import re
 import time
 from collections import Counter
 from contextlib import contextmanager
@@ -50,6 +51,8 @@ SITES = frozenset({
     "serve.stack",           # host-side batch stacking (poisonable)
     "serve.device_put",      # host→device transfer of a stacked batch
     "serve.batched_call",    # vmapped whole-program dispatch
+    "lower.chunk_step",      # out-of-core chunk step dispatch (chunked.py)
+    "lower.chunk_prefetch",  # out-of-core tile host→device prefetch
 })
 
 KINDS = ("transient", "capacity", "deterministic", "poison", "slow")
@@ -203,15 +206,32 @@ def site(name: str, **payload) -> None:
 
 _TRANSIENT_TOKENS = ("UNAVAILABLE", "DEADLINE_EXCEEDED", "ABORTED",
                      "connection reset", "socket closed", "NCCL")
-_CAPACITY_TOKENS = ("RESOURCE_EXHAUSTED", "out of memory", "OOM",
-                    "Out of memory")
+# matched case-insensitively against str(exc) — real allocator messages
+# disagree on casing across backends ("RESOURCE_EXHAUSTED: Out of
+# memory", "Resource exhausted: ...", CUDA's "out of memory", TPU's
+# "Ran out of memory in memory space hbm")
+_CAPACITY_TOKENS = ("resource_exhausted", "resource exhausted",
+                    "out of memory", "out_of_memory",
+                    "ran out of memory", "failed to allocate",
+                    "allocation failure", "hbm exhausted")
+# "OOM" only as a standalone word — a bare substring would classify
+# "bloom rebuild failed" as capacity
+_OOM_WORD = re.compile(r"(?<![A-Za-z0-9])OOM(?![A-Za-z0-9])", re.IGNORECASE)
+# exception TYPES that mean capacity regardless of message wording:
+# jaxlib's XlaRuntimeError subclasses (XlaRuntimeError itself carries the
+# status token, but backends also raise dedicated OOM types), numpy's
+# _ArrayMemoryError (a MemoryError subclass, caught above), torch-style
+# OutOfMemoryError — matched by NAME up the MRO so classification never
+# imports backend modules
+_CAPACITY_TYPE_NAMES = frozenset({"OutOfMemoryError", "XlaOomError"})
 
 
 def classify(exc: BaseException) -> str:
     """transient / capacity / deterministic.  Injected faults classify by
-    type; real runtime errors by the XLA status tokens their messages
-    carry (an honest RESOURCE_EXHAUSTED from a too-big allocation lands
-    in the same capacity lane as the scripted one).  Anything
+    type; real runtime errors by exception type name and the XLA status
+    tokens their messages carry, case-insensitively (an honest
+    ``XlaRuntimeError: RESOURCE_EXHAUSTED`` from a too-big allocation
+    lands in the same capacity lane as the scripted one).  Anything
     unrecognized is deterministic — the safe default, because retrying an
     unknown error forever is the one behaviour the ladder must never
     exhibit."""
@@ -221,8 +241,11 @@ def classify(exc: BaseException) -> str:
         return "capacity"
     if isinstance(exc, DeterministicFault):
         return "deterministic"
+    if any(t.__name__ in _CAPACITY_TYPE_NAMES for t in type(exc).__mro__):
+        return "capacity"
     s = str(exc)
-    if any(t in s for t in _CAPACITY_TOKENS):
+    low = s.lower()
+    if any(t in low for t in _CAPACITY_TOKENS) or _OOM_WORD.search(s):
         return "capacity"
     if any(t in s for t in _TRANSIENT_TOKENS):
         return "transient"

@@ -443,6 +443,13 @@ class PlanExecutor:
     def execute(self, nodes, env, ctx: ExecContext = _EMPTY_CTX):
         for node in nodes:
             if isinstance(node, P.SeqLoop):
+                if node.cond is None and getattr(node, "chunk_bag", None):
+                    # a ChunkLoop (core/chunked.py) reaching the plain
+                    # executor: the whole bag is resident here, so the
+                    # stream degrades to one all-resident "tile" — plain
+                    # sequencing of the body, same results
+                    self.execute(node.body, env, ctx)
+                    continue
                 self._exec_seq_loop(node, env, ctx)
             elif isinstance(node, P.FusedRound):
                 # round-fusion region: plain sequencing on a single device
@@ -1188,7 +1195,8 @@ class CompiledProgram:
                  dense_fastpath=True, op_select="cost",
                  autotune_cache=None, compile_mode="whole",
                  donate=False, round_fusion=True,
-                 skew_rebalance=True, skew_salting="auto"):
+                 skew_rebalance=True, skew_salting="auto",
+                 out_of_core="auto", memory_budget=None, chunk_rows=None):
         self.program = prog
         self.target = target
         from .op_select import CACHE_FILE, OpSelector
@@ -1202,7 +1210,10 @@ class CompiledProgram:
                                  autotune_cache=autotune_cache,
                                  round_fusion=round_fusion,
                                  skew_rebalance=skew_rebalance,
-                                 skew_salting=skew_salting)
+                                 skew_salting=skew_salting,
+                                 out_of_core=out_of_core,
+                                 memory_budget=memory_budget,
+                                 chunk_rows=chunk_rows)
         self.plan = plan_program(target, prog, self.config)
         from .dist_analysis import collect
         self.dists = collect(self.plan)   # array → Dist (pass-8 annotations)
@@ -1233,6 +1244,18 @@ class CompiledProgram:
         self.faults = F.FaultLedger(prog.name)   # failure ledger (§11);
         self.policy = F.RetryPolicy()  # shared with DistributedProgram
         self._last_whole_exc = None    # why the LAST _run_whole descended
+        # ---- out-of-core capacity tier (DESIGN.md §12) ----
+        # out_of_core: "auto" = admit against memory_budget when set, and
+        # descend to chunked streaming on classified capacity errors;
+        # "force" = every run() streams; "off" = pre-§12 ladder (capacity
+        # bottoms out at interp/single-device).  chunk_rows pins the tile;
+        # None derives it from the budget via memest/choose_chunk_rows.
+        self.out_of_core = out_of_core
+        self.memory_budget = memory_budget
+        self.chunk_rows = chunk_rows
+        self._chunker = None           # lazy chunked.ChunkRunner
+        self._mem_last = None          # last memest.MemEstimate (explain)
+        self._mem_cache: dict = {}     # shape key → MemEstimate
         self._donate_names = frozenset(
             d for n in self.plan for d in P.dests_of(n)
             if prog.params.get(d) is not None
@@ -1267,7 +1290,89 @@ class CompiledProgram:
                     f"({len(self._whole_bad)} signatures sitting out ttl, "
                     f"{self.whole_retries} re-attempted)"
                     if self.trace_failures or self.whole_retries else ""))
+        if self._mem_last is not None:
+            text += "\n" + self._mem_last.summary(self.memory_budget)
         return text
+
+    # ---- out-of-core capacity tier (DESIGN.md §12) ----
+    @property
+    def chunker(self):
+        if self._chunker is None:
+            from .chunked import ChunkRunner
+            self._chunker = ChunkRunner(self)
+        return self._chunker
+
+    def estimate_memory(self, inputs: dict):
+        """Peak-device-bytes estimate for this call's shapes
+        (core/memest.py) — the admission-check input.  Cached per shape
+        class; also surfaced through explain()/explain_memory()."""
+        from . import memest
+        senv = memest.shape_env(self.program, inputs)
+        key = tuple(sorted((n, repr(e)) for n, e in senv.items()))
+        est = self._mem_cache.get(key)
+        if est is None:
+            est = memest.estimate(self.plan, self.program, senv,
+                                  donate=self.donate)
+            self._mem_cache[key] = est
+        self._mem_last = est
+        return est
+
+    def explain_memory(self, inputs: dict) -> str:
+        return self.estimate_memory(inputs).explain(self.memory_budget)
+
+    def explain_chunked(self) -> str:
+        """The chunked (out-of-core) form of the plan, ChunkLoops shown."""
+        return self.chunker.explain()
+
+    def _ooc_admits(self, inputs: dict) -> bool:
+        """True when this call must take the chunked tier up front: forced,
+        or its estimated peak exceeds the memory budget (the hard
+        admission check — chunk instead of letting XLA OOM)."""
+        if self.out_of_core == "force":
+            return True
+        if self.out_of_core == "off" or self.memory_budget is None:
+            return False
+        est = self.estimate_memory(inputs)
+        if est.peak_bytes > self.memory_budget:
+            from .memest import fmt_bytes
+            self.faults.record(
+                "admission", "chunked",
+                f"estimated peak {fmt_bytes(est.peak_bytes)} > budget "
+                f"{fmt_bytes(self.memory_budget)}: streaming chunked")
+            return True
+        return False
+
+    def _initial_chunk_rows(self, inputs: dict) -> int:
+        if self.chunk_rows:
+            return int(self.chunk_rows)
+        from .chunked import DEFAULT_CHUNK_ROWS, choose_chunk_rows
+        if self.memory_budget is not None:
+            return choose_chunk_rows(self.estimate_memory(inputs),
+                                     self.memory_budget)
+        return DEFAULT_CHUNK_ROWS
+
+    def _run_chunked(self, inputs: dict, *, observer=None, loop_state=None,
+                     recovering=False):
+        """The chunked rung: stream bag tiles through resident
+        accumulators (core/chunked.py).  A capacity error INSIDE the
+        stream halves the tile and retries — descending the memory curve,
+        never ascending it — until a 1-row tile fails too."""
+        rows = self._initial_chunk_rows(inputs)
+        while True:
+            try:
+                out = self.chunker.run(inputs, chunk_rows=rows,
+                                       observer=observer,
+                                       loop_state=loop_state)
+                if recovering:
+                    self.faults.recover("chunked")
+                return out
+            except Exception as ex:           # noqa: BLE001 — ladder
+                if F.classify(ex) != "capacity" or rows <= 1:
+                    raise
+                self.faults.descend(f"chunked[{rows}]",
+                                    f"chunked[{rows // 2}]", ex)
+                rows //= 2
+                recovering = True
 
     # -- public execution interface (distributed.py consumes this) --
     def execute(self, env: dict, *, bag_offsets=None, bag_limits=None,
@@ -1377,8 +1482,13 @@ class CompiledProgram:
                 self.trace_failures += 1
                 self._whole_bad[key] = self.policy.disable_ttl
                 self._last_whole_exc = ex
-                self.faults.descend("whole", "eager", ex)
-                return None                   # guaranteed eager fallback
+                # capacity never ascends the memory curve (§12): the
+                # chunked tier is the correct rung, not the eager path
+                # (same buffers, same OOM) — run() routes on the class
+                to = "chunked" if (F.classify(ex) == "capacity"
+                                   and self.out_of_core != "off") else "eager"
+                self.faults.descend("whole", to, ex)
+                return None                   # run() picks the rung
             self.trace_count += 1
             self._whole_cache[key] = (fn, dict(self.executor.decisions))
             return out
@@ -1390,13 +1500,23 @@ class CompiledProgram:
         return fn(donated, kept)
 
     def run(self, inputs: dict) -> dict:
+        # hard admission check (DESIGN.md §12): calls whose estimated
+        # peak exceeds the memory budget stream chunked from the start
+        if self._ooc_admits(inputs):
+            return self._run_chunked(inputs)
         whole_failed = False
         if self.compile_mode == "whole":
             self._last_whole_exc = None
             out = self._run_whole(inputs)
             if out is not None:
                 return out
-            whole_failed = self._last_whole_exc is not None
+            ex = self._last_whole_exc
+            whole_failed = ex is not None
+            if whole_failed and F.classify(ex) == "capacity" \
+                    and self.out_of_core != "off":
+                # whole → chunked: the capacity rung (never eager, which
+                # re-materializes the same all-resident buffers)
+                return self._run_chunked(inputs, recovering=True)
 
         def eager():
             env = self.prepare_env(inputs)
@@ -1404,9 +1524,10 @@ class CompiledProgram:
                 self.plan, env, self.selector, self.config.skew_salting))
             return {n: env[n] for n in self.program.outputs}
 
-        # degradation ladder (DESIGN.md §11): whole → eager per-node (the
-        # executor's own node fallback chains live inside) → interpreter
-        # oracle.  Transients retry at each level with bounded backoff;
+        # degradation ladder (DESIGN.md §11/§12): whole → eager per-node
+        # (the executor's own node fallback chains live inside) → chunked
+        # streaming for capacity / interpreter oracle for the rest.
+        # Transients retry at each level with bounded backoff;
         # deterministic errors get AT MOST one descent before surfacing.
         try:
             out = F.run_with_retries(eager, policy=self.policy,
@@ -1421,14 +1542,28 @@ class CompiledProgram:
                 # surface it, never fall through to the oracle (which
                 # would silently mask it)
                 raise
-            # transient/capacity persisting past the eager retries: the
-            # reference interpreter is the bottom rung — correct numpy
-            # float64 results (not bit-identical; the ledger says so)
-            self.faults.descend("eager", "interp", ex)
-            from .interp import run as _oracle
-            out = _oracle(self.program, dict(inputs))
-            self.faults.recover("interp")
-            return {n: out[n] for n in self.program.outputs}
+            if F.classify(ex) == "capacity" and self.out_of_core != "off":
+                # eager → chunked: stream tiles instead of the oracle
+                # (the oracle holds everything host-resident in float64 —
+                # fine for correctness, wrong rung for capacity)
+                self.faults.descend("eager", "chunked", ex)
+                try:
+                    return self._run_chunked(inputs, recovering=True)
+                except Exception as ex2:      # noqa: BLE001 — ladder
+                    if F.classify(ex2) == "deterministic":
+                        raise
+                    return self._run_interp(inputs, "chunked", ex2)
+            # transient persisting past the eager retries: the reference
+            # interpreter is the bottom rung — correct numpy float64
+            # results (not bit-identical; the ledger says so)
+            return self._run_interp(inputs, "eager", ex)
+
+    def _run_interp(self, inputs: dict, from_level: str, ex) -> dict:
+        self.faults.descend(from_level, "interp", ex)
+        from .interp import run as _oracle
+        out = _oracle(self.program, dict(inputs))
+        self.faults.recover("interp")
+        return {n: out[n] for n in self.program.outputs}
 
     def explain_faults(self) -> str:
         """Render the failure ledger (DESIGN.md §11) next to explain():
@@ -1458,7 +1593,16 @@ class CompiledProgram:
         restored, and iteration continues from there.  A resumed run is
         bit-identical to an uninterrupted stepwise run because both
         execute the exact same per-iteration body computations on the
-        same carry values.  Loop indices follow plan.seq_loops()."""
+        same carry values.  Loop indices follow plan.seq_loops().
+
+        Out-of-core runs route to the chunked plan, whose top-level
+        ChunkLoops are SeqLoops in this numbering — the observer fires
+        once per CHUNK with the accumulator carry, so LoopRunner
+        checkpoints give chunk-granular resume of a killed streaming run
+        with no extra machinery (DESIGN.md §12)."""
+        if self._ooc_admits(inputs):
+            return self._run_chunked(inputs, observer=observer,
+                                     loop_state=loop_state)
         env = self.prepare_env(inputs)
         salts = collect_salts(self.plan, env, self.selector,
                               self.config.skew_salting)
@@ -1613,7 +1757,10 @@ def compile_program(fn_or_prog, *, restrictions=True,
                     donate=False,
                     round_fusion=True,
                     skew_rebalance=True,
-                    skew_salting="auto") -> CompiledProgram:
+                    skew_salting="auto",
+                    out_of_core="auto",
+                    memory_budget=None,
+                    chunk_rows=None) -> CompiledProgram:
     """Front door: loop program → restrictions check (Def. 3.1) →
     comprehension translation (Fig. 2) → pass pipeline (passes.py) →
     executable physical plan.
@@ -1647,7 +1794,16 @@ def compile_program(fn_or_prog, *, restrictions=True,
     fallback).  skew_salting picks the hot-key salting policy for
     group-bys: "auto" (default) resolves per node from the run-time skew
     probe + cost model, "off" pins S=1 everywhere, "force:<S>" salts every
-    eligible group-by with factor S (A/B tests and goldens)."""
+    eligible group-by with factor S (A/B tests and goldens).
+
+    Out-of-core (DESIGN.md §12): memory_budget (bytes) turns on the hard
+    admission check — calls whose memest peak estimate exceeds it stream
+    bag tiles through resident accumulators (core/chunked.py) instead of
+    running all-resident; classified capacity errors (real XlaRuntimeError
+    OOMs or injected ones) descend to the same chunked rung.
+    out_of_core: "auto" (default) = admit + descend as above; "force" =
+    every run streams (A/B tests); "off" = pre-§12 ladder.  chunk_rows
+    pins the streaming tile; None derives it from the budget."""
     prog = fn_or_prog if isinstance(fn_or_prog, Program) \
         else fn_or_prog.program
     if restrictions:
@@ -1656,4 +1812,5 @@ def compile_program(fn_or_prog, *, restrictions=True,
     return CompiledProgram(prog, target, optimize_contractions, use_kernels,
                            infer_distributions, dense_fastpath, op_select,
                            autotune_cache, compile_mode, donate,
-                           round_fusion, skew_rebalance, skew_salting)
+                           round_fusion, skew_rebalance, skew_salting,
+                           out_of_core, memory_budget, chunk_rows)

@@ -92,6 +92,13 @@ class PlanConfig:
     #                                      "auto" (cost model + runtime
     #                                      probe) | "off" | "force:<S>"
     #                                      (static hint: S sub-keys per key)
+    out_of_core: str = "auto"            # chunked capacity tier (§12):
+    #                                      "auto" (admit vs budget + descend
+    #                                      on capacity) | "force" | "off"
+    memory_budget: int | None = None     # device bytes the admission check
+    #                                      holds a call's memest peak under
+    chunk_rows: int | None = None        # pinned streaming tile; None =
+    #                                      derive from budget (memest)
 
 
 # ---------------------------------------------------------------------------

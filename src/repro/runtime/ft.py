@@ -88,7 +88,12 @@ class LoopRunner:
     BIT-IDENTICAL to an uninterrupted stepwise run — both execute the
     exact same per-iteration body computations on the same carry values
     (npz array round-trips are exact).  Per-iteration wall times feed the
-    program's straggler watchdog (`explain_faults()`)."""
+    program's straggler watchdog (`explain_faults()`).
+
+    Out-of-core runs (DESIGN.md §12) ride the same machinery unchanged:
+    a ChunkLoop is a top-level SeqLoop to run_stepwise, so its observer
+    fires per CHUNK and a killed streamed run resumes from the last chunk
+    checkpoint, fast-forwarding past completed tiles."""
 
     def __init__(self, cp, ckpt_dir: str, every: int = 1, keep: int = 3,
                  async_write: bool = False):

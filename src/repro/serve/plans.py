@@ -128,7 +128,8 @@ class _Bucket:
     __slots__ = ("key", "cp", "program", "label", "static", "bag_pads",
                  "arr_pads", "limit_bags", "limit_arrays", "tickets",
                  "flushes", "reqs", "traced", "hits", "real_lanes", "lanes",
-                 "pad_rows", "bag_rows", "failed_flushes")
+                 "pad_rows", "bag_rows", "failed_flushes", "est_peak",
+                 "lane_cap")
 
     def __init__(self, key, cp, program, label, static, bag_pads, arr_pads):
         self.key = key
@@ -150,6 +151,8 @@ class _Bucket:
         self.pad_rows = 0                  # padded bag rows
         self.bag_rows = 0                  # total bag rows dispatched
         self.failed_flushes = 0            # batched calls that raised
+        self.est_peak = None               # estimated device bytes per lane
+        self.lane_cap = None               # memory_budget // est_peak
 
     def occ(self) -> float:
         return 100.0 * self.real_lanes / self.lanes if self.lanes else 0.0
@@ -178,14 +181,19 @@ class PlanServer:
     `batch_round=True` also rounds the LANE count up to a power of two
     (replicating the first request into dummy lanes, outputs dropped) so
     the compile cache holds O(log max_batch) entries per bucket instead of
-    one per distinct batch size."""
+    one per distinct batch size.  `memory_budget` (device bytes) makes
+    admission memory-aware: each bucket's flush is capped at
+    budget // estimated-peak-per-lane lanes (excess requests wait,
+    `mem_deferred`), and requests whose single lane cannot fit shed with a
+    RESOURCE_EXHAUSTED error (`mem_shed`) instead of OOM-killing a
+    flush."""
 
     def __init__(self, programs: dict, *, max_batch: int = 8,
                  flush_ms: float = 2.0, bucket_floor: int = 8,
                  batch_round: bool = True, clock=None, prefetch: bool = True,
                  sequential_fallback: bool = True, deadline_ms: float = None,
                  queue_cap: int = None, nan_guard: bool = True,
-                 bisect: bool = True):
+                 bisect: bool = True, memory_budget: int = None):
         self._programs = dict(programs)
         self.max_batch = int(max_batch)
         self.flush_s = float(flush_ms) / 1e3
@@ -201,6 +209,18 @@ class PlanServer:
         self.queue_cap = None if queue_cap is None else int(queue_cap)
         self.nan_guard = bool(nan_guard)
         self.bisect = bool(bisect)
+        # memory-aware admission (DESIGN.md §12): with a device budget set,
+        # each bucket gets a lane cap = budget // estimated-peak-per-lane
+        # (memest over the bucket's padded signature).  A flush never takes
+        # more lanes than fit — the remainder WAITS in queue (mem_deferred)
+        # instead of the whole batch OOM-killing mid-flight; a request whose
+        # single lane already exceeds the budget is shed with a
+        # RESOURCE_EXHAUSTED error (mem_shed) that classify() reads as
+        # capacity, steering the caller toward out-of-core run().
+        self.memory_budget = None if memory_budget is None \
+            else int(memory_budget)
+        self.mem_deferred = 0              # lanes queued past their flush
+        self.mem_shed = 0                  # requests too big for the budget
         self._clock = clock if clock is not None else time.monotonic
         self._lock = threading.RLock()
         self._buckets: dict = {}           # key → _Bucket (insertion order)
@@ -315,8 +335,35 @@ class PlanServer:
             b = _Bucket(key, cp, program, self._label(program, key, static,
                                                       bag_pads, arr_pads),
                         static, bag_pads, arr_pads)
+            self._mem_size(b, tuple(psig))
             self._buckets[key] = b
         return b
+
+    def _mem_size(self, b: _Bucket, psig) -> None:
+        """Estimate peak device bytes for ONE lane of this bucket (the
+        padded signature IS the shape set every lane runs at) and derive
+        the lane cap.  Estimation failure just leaves the bucket uncapped
+        — admission control is an optimization, never a correctness
+        gate."""
+        if self.memory_budget is None:
+            return
+        try:
+            from ..core import memest
+            senv = memest.shape_env_from_signature(b.cp.program, psig)
+            est = memest.estimate(b.cp.plan, b.cp.program, senv)
+            b.est_peak = int(est.peak_bytes)
+            if b.est_peak > 0:
+                b.lane_cap = self.memory_budget // b.est_peak
+        except Exception:                  # noqa: BLE001 — advisory only
+            return
+
+    def _take_n(self, b: _Bucket) -> int:
+        """Lanes one flush of this bucket may take: max_batch, tightened
+        by the memory-derived lane cap."""
+        n = self.max_batch
+        if b.lane_cap is not None:
+            n = min(n, max(b.lane_cap, 1))
+        return n
 
     @staticmethod
     def _label(program, key, static, bag_pads, arr_pads) -> str:
@@ -410,6 +457,10 @@ class PlanServer:
         are dropped after the call).  Returns (arrays, lengths) numpy
         pytrees ready for one device_put."""
         Bp = self._round_lanes(len(take))
+        if b.lane_cap is not None:
+            # never let lane ROUNDING inflate a batch past the budget the
+            # admission cap just enforced (dummy lanes cost real memory)
+            Bp = max(len(take), min(Bp, b.lane_cap))
         lanes = list(take) + [take[0]] * (Bp - len(take))
         arrays, lengths = {}, {}
         for name, t in b.cp.program.params.items():
@@ -449,7 +500,7 @@ class PlanServer:
         runs.  Consumed by _flush when the ticket set matches.  Purely an
         overlap optimization — a fault here just skips the prefetch; the
         flush restacks and meets the fault on its own dispatch path."""
-        take = list(b.tickets)[:self.max_batch]
+        take = list(b.tickets)[:self._take_n(b)]
         if not take:
             return
         try:
@@ -478,11 +529,46 @@ class PlanServer:
         return out
 
     def _flush(self, b: _Bucket, force: bool) -> int:
-        take = [b.tickets.popleft()
-                for _ in range(min(self.max_batch, len(b.tickets)))]
+        if b.lane_cap == 0:
+            return self._shed_oversize(b)
+        n = min(self._take_n(b), len(b.tickets))
+        if b.lane_cap is not None and len(b.tickets) > n:
+            # memory-aware admission: the rest of the bucket WAITS for the
+            # next flush instead of riding a batch projected past the
+            # device budget and OOM-killing everyone mid-flight
+            self.mem_deferred += len(b.tickets) - n
+            self.faults.record(
+                "defer", b.label,
+                f"{len(b.tickets) - n} lanes held: lane_cap={b.lane_cap} "
+                f"(peak≈{b.est_peak}B/lane, budget={self.memory_budget}B)")
+        take = [b.tickets.popleft() for _ in range(n)]
         if not take:
             return 0
         return self._dispatch(b, take, force, staged_ok=True)
+
+    def _shed_oversize(self, b: _Bucket) -> int:
+        """A single lane of this bucket already exceeds the device budget:
+        no batch composition can serve it, so every queued request sheds
+        with a capacity-classified error (the caller's remedy is the
+        out-of-core run() path, not a retry here)."""
+        self._staged.pop(b.key, None)
+        shed = 0
+        while b.tickets:
+            tk = b.tickets.popleft()
+            tk._resolve("failed", error=RuntimeError(
+                f"RESOURCE_EXHAUSTED: request {tk.rid} needs "
+                f"≈{b.est_peak} bytes/lane, over the "
+                f"{self.memory_budget}-byte serving budget; run it "
+                f"out-of-core (memory_budget= on compile_program)"))
+            self.failed += 1
+            self.mem_shed += 1
+            shed += 1
+        if shed:
+            self.faults.record("shed", b.label,
+                               f"{shed} oversize requests: "
+                               f"peak≈{b.est_peak}B/lane > "
+                               f"budget={self.memory_budget}B")
+        return shed
 
     def _dispatch(self, b: _Bucket, take, force, staged_ok) -> int:
         """Serve `take` as ONE batched call.  Success accounting happens
@@ -657,6 +743,8 @@ class PlanServer:
                 "failed_flushes": self.failed_flushes,
                 "bisections": self.bisections,
                 "poisoned": self.poisoned,
+                "mem_deferred": self.mem_deferred,
+                "mem_shed": self.mem_shed,
                 "retries": self.faults.counters["retry"],
                 "flushes": sum(b.flushes for b in self._buckets.values()),
                 "batch_traced": sum(b.traced
@@ -669,7 +757,8 @@ class PlanServer:
                     b.label: {"depth": len(b.tickets), "reqs": b.reqs,
                               "flushes": b.flushes, "occ": b.occ(),
                               "pad": b.padf(), "traced": b.traced,
-                              "hits": b.hits}
+                              "hits": b.hits, "est_peak": b.est_peak,
+                              "lane_cap": b.lane_cap}
                     for b in self._buckets.values()},
             }
 
@@ -703,6 +792,16 @@ class PlanServer:
                    f"failed_flushes={s['failed_flushes']} "
                    f"bisections={s['bisections']} "
                    f"poisoned={s['poisoned']} retries={s['retries']}")
+        if self.memory_budget is not None:
+            from ..core.memest import fmt_bytes
+            caps = "  ".join(
+                f"{r['lane_cap'] if r['lane_cap'] is not None else '-'}"
+                f"@{fmt_bytes(r['est_peak']) if r['est_peak'] else '?'}"
+                for r in s["buckets"].values())
+            out.append(f"memory: budget={fmt_bytes(self.memory_budget)} "
+                       f"mem_deferred={s['mem_deferred']} "
+                       f"mem_shed={s['mem_shed']}  "
+                       f"lane_caps=[{caps}]")
         return "\n".join(out)
 
     def explain_faults(self) -> str:

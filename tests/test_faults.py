@@ -91,6 +91,47 @@ def test_classify():
     assert F.classify(ValueError("bad user input")) == "deterministic"
 
 
+def test_classify_real_oom_messages():
+    """Verbatim allocator messages captured from jaxlib / XLA / CUDA /
+    torch runs: every one must read as capacity, or real OOMs would take
+    the retry (or surface) path instead of the chunked rung."""
+    real = [
+        "RESOURCE_EXHAUSTED: Out of memory while trying to allocate "
+        "75497472 bytes.",
+        "RESOURCE_EXHAUSTED: Ran out of memory in memory space hbm. "
+        "Used 33.61G of 15.48G hbm. Exceeded hbm capacity by 18.13G.",
+        "Resource exhausted: Out of memory while trying to allocate "
+        "4294967296 bytes.",
+        "CUDA_ERROR_OUT_OF_MEMORY: out of memory",
+        "CUDA out of memory. Tried to allocate 20.00 MiB",
+        "INTERNAL: Failed to allocate 1073741824 bytes",
+    ]
+    for msg in real:
+        assert F.classify(RuntimeError(msg)) == "capacity", msg
+
+    # the runtime's exception TYPES classify by name even with an
+    # unhelpful message (jaxlib.xla_extension.XlaRuntimeError subclasses
+    # RuntimeError; torch raises OutOfMemoryError)
+    class XlaRuntimeError(RuntimeError):
+        pass
+
+    class OutOfMemoryError(RuntimeError):
+        pass
+
+    assert F.classify(OutOfMemoryError("")) == "capacity"
+    assert F.classify(XlaRuntimeError("RESOURCE_EXHAUSTED: oom")) \
+        == "capacity"
+    assert F.classify(XlaRuntimeError("INTERNAL: unknown")) \
+        == "deterministic"
+
+    # word-boundary matching: "bloom"/"BOOM" must NOT read as OOM
+    assert F.classify(RuntimeError("bloom filter rebuild failed")) \
+        == "deterministic"
+    assert F.classify(RuntimeError("BOOM")) == "deterministic"
+    assert F.classify(RuntimeError("device OOM during fusion")) \
+        == "capacity"
+
+
 def test_run_with_retries_bounded_backoff():
     ledger = F.FaultLedger("t")
     sleeps = []
@@ -394,16 +435,32 @@ except F.DeterministicFault:
 assert raised
 assert dp.faults.counters["descend"] == 1
 
-# capacity FOREVER: rounds -> rep -> single-device (whose ladder holds)
+# capacity FOREVER: rounds -> chunked (out-of-core streaming), NEVER the
+# rep rung — replicating everything ASCENDS the per-device memory curve,
+# exactly the wrong move for an OOM
 dp = fresh()
 with F.inject(F.FaultSpec("dist.round_exec", "capacity", nth=1,
                           times=10**6)):
     out = dp.run(ins)
 assert maxerr(out) < 1e-6
-assert dp.faults.level_reached == "single-device"
+assert dp.faults.level_reached == "chunked"
 text = dp.explain_faults()
 assert "== fault ledger: pagerank ==" in text
-assert "ladder-level-reached=single-device" in text
+assert "ladder-level-reached=chunked" in text
+assert "rounds->chunked" in text
+assert "rounds->rep" not in text
+
+# with out-of-core disabled, capacity falls back to the single-device
+# rung directly (still never rep)
+dp = compile_distributed(fn, mesh, ("data",), mode="shardmap",
+                         out_of_core="off")
+dp.faults.sleep = lambda s: None
+with F.inject(F.FaultSpec("dist.round_exec", "capacity", nth=1,
+                          times=10**6)):
+    out = dp.run(ins)
+assert maxerr(out) < 1e-6
+assert dp.faults.level_reached == "single-device"
+assert "rounds->single-device" in dp.explain_faults()
 print("DIST_FAULTS_OK")
 """
 

@@ -1,0 +1,133 @@
+"""Peak-device-bytes estimator (DESIGN.md §12, `core/memest.py`): the
+pass walks the physical plan with a shape environment built from concrete
+inputs (or a serving-bucket signature), charges resident operands +
+per-node temporaries + destination copies + collective buffers, and its
+verdict — all-resident vs chunked — is the admission check run() consults
+before touching the device.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compile_program
+from repro.core import memest
+from repro.core.programs import ALL
+
+
+def _wc_inputs(n=256, k=16):
+    r = np.random.default_rng(0)
+    return dict(W=(r.integers(0, k, n).astype(np.int32),),
+                C=np.zeros(k, np.float32))
+
+
+def _pr_inputs(n=64, ne=512):
+    r = np.random.default_rng(1)
+    return dict(E=(r.integers(0, n, ne).astype(np.int32),
+                   r.integers(0, n, ne).astype(np.int32)),
+                P=np.full(n, 1.0 / n, np.float32),
+                NP=np.zeros(n, np.float32), C=np.zeros(n, np.float32),
+                N=n, num_steps=3.0, steps=0.0, b=0.85)
+
+
+def test_fmt_bytes():
+    assert memest.fmt_bytes(512) == "512B"
+    assert memest.fmt_bytes(2048) == "2.0KiB"
+    assert memest.fmt_bytes(3 * 1024 ** 2) == "3.0MiB"
+    assert "GiB" in memest.fmt_bytes(5 * 1024 ** 3)
+
+
+def test_shape_env_kinds():
+    cp = compile_program(ALL["pagerank"])
+    env = memest.shape_env(cp.program, cp.canonical_inputs(_pr_inputs()))
+    assert env["N"] == ("dim", 64)
+    kind, rows, cols = env["E"]
+    assert kind == "bag" and rows == 512 and len(cols) == 2
+    assert env["P"][0] == "array" and env["P"][1] == (64,)
+
+
+def test_estimate_charges_more_than_resident():
+    """The peak must exceed the raw resident footprint: temporaries for
+    the widest node (gathered operands, masks, keys) are real bytes."""
+    cp = compile_program(ALL["word_count"])
+    ins = cp.canonical_inputs(_wc_inputs())
+    est = memest.estimate(cp.plan, cp.program, memest.shape_env(
+        cp.program, ins))
+    assert est.peak_bytes > est.resident > 0
+    assert est.bag_bytes["W"] >= 256  # one int32 column of 256 rows
+    assert est.per_row("W") > 0
+    assert est.fixed_bytes < est.peak_bytes
+
+
+def test_estimate_scales_with_rows():
+    cp = compile_program(ALL["word_count"])
+    small = cp.estimate_memory(_wc_inputs(n=256))
+    big = cp.estimate_memory(_wc_inputs(n=4096))
+    assert big.peak_bytes > 4 * small.peak_bytes
+    # fixed bytes (dests + non-bag residents) do NOT scale with the bag
+    assert big.fixed_bytes == small.fixed_bytes
+
+
+def test_summary_verdict_flips_on_budget():
+    cp = compile_program(ALL["word_count"])
+    est = cp.estimate_memory(_wc_inputs())
+    roomy = est.summary(10 * est.peak_bytes)
+    tight = est.summary(est.peak_bytes // 4)
+    assert "all-resident" in roomy and "chunked" not in roomy
+    assert "chunked" in tight
+    assert "peak≈" in est.summary(None)
+
+
+def test_explain_includes_memory_line_after_estimate():
+    cp = compile_program(ALL["word_count"], memory_budget=10 ** 9)
+    cp.estimate_memory(_wc_inputs())
+    assert "memory: peak≈" in cp.explain()
+    long = cp.explain_memory(_wc_inputs())
+    assert "== memory estimate" in long and "streaming" in long
+
+
+def test_estimate_memory_is_cached():
+    cp = compile_program(ALL["word_count"])
+    a = cp.estimate_memory(_wc_inputs())
+    b = cp.estimate_memory(_wc_inputs())
+    assert a is b
+    c = cp.estimate_memory(_wc_inputs(n=512))
+    assert c is not a
+
+
+def test_signature_env_matches_concrete_env():
+    """The serving layer only has the bucket signature — the estimate it
+    derives must equal the one concrete inputs would give at the padded
+    shapes (that equality is what makes lane caps trustworthy)."""
+    cp = compile_program(ALL["word_count"])
+    ins = cp.canonical_inputs(_wc_inputs(n=256))
+    sig = []
+    for name, t in cp.program.params.items():
+        v = ins[name]
+        if t.kind == "bag":
+            sig.append((name, "bag", tuple(
+                (tuple(c.shape), str(c.dtype)) for c in v)))
+        elif t.kind == "dim":
+            sig.append((name, "dim", int(v)))
+        else:
+            sig.append((name, t.kind, tuple(np.shape(v)),
+                        str(np.asarray(v).dtype)))
+    env_a = memest.shape_env(cp.program, ins)
+    env_b = memest.shape_env_from_signature(cp.program, sig)
+    pa = memest.estimate(cp.plan, cp.program, env_a).peak_bytes
+    pb = memest.estimate(cp.plan, cp.program, env_b).peak_bytes
+    assert pa == pb
+
+
+def test_loop_program_peaks_at_widest_node():
+    """pagerank's SeqLoop charges the MAX over its body nodes, not the
+    sum — iterations reuse the same buffers."""
+    cp = compile_program(ALL["pagerank"])
+    est = cp.estimate_memory(_pr_inputs())
+    node_peaks = [c.temp + c.dest + c.collective for c in est.nodes]
+    assert est.peak_bytes == est.resident + max(node_peaks)
+
+
+def test_explain_text_lists_nodes():
+    cp = compile_program(ALL["pagerank"])
+    text = cp.explain_memory(_pr_inputs())
+    assert "SegmentReduce" in text or "segment" in text.lower()
+    assert "resident" in text and "budget" not in text.splitlines()[0]

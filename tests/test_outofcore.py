@@ -1,0 +1,291 @@
+"""Out-of-core execution (DESIGN.md §12, `core/chunked.py`): plans whose
+inputs dwarf the device budget stream bag tiles through the existing
+segment-reduce/scatter rounds while destination accumulators stay
+resident.  The contract under test:
+
+* bit-identity — a chunked run equals the all-resident `run_stepwise()`
+  (host-driven node-at-a-time execution, the same reference PR 8's resume
+  path uses) for EVERY tile size, and equals jitted `run()` for loop-free
+  programs;
+* admission — a memory estimate over budget routes run() through the
+  chunked path up front, recorded in the ledger;
+* the ladder — capacity errors descend whole → chunked (and eager →
+  chunked), repeated capacity INSIDE the stream halves the tile,
+  transients retry in place at the chunk sites, deterministic faults
+  surface;
+* resume — a killed chunked run restarts from the last chunk checkpoint
+  via the ordinary `runtime/ft.LoopRunner` machinery (a ChunkLoop is just
+  a top-level SeqLoop to the checkpointer).
+"""
+import numpy as np
+import pytest
+
+from repro.core import compile_program
+from repro.core import faults as F
+from repro.core import plan as P
+from repro.core.chunked import ChunkLoop, choose_chunk_rows
+from repro.core.programs import ALL
+from repro.runtime import LoopRunner
+
+N, NE = 64, 512
+
+
+def pr_inputs(seed=7, ne=NE, steps=3.0):
+    r = np.random.default_rng(seed)
+    return dict(E=(r.integers(0, N, ne).astype(np.int32),
+                   r.integers(0, N, ne).astype(np.int32)),
+                P=np.full(N, 1.0 / N, np.float32),
+                NP=np.zeros(N, np.float32), C=np.zeros(N, np.float32),
+                N=N, num_steps=steps, steps=0.0, b=0.85)
+
+
+def wc_inputs(seed=3, n=1024, k=32):
+    r = np.random.default_rng(seed)
+    return dict(W=(r.integers(0, k, n).astype(np.int32),),
+                C=np.zeros(k, np.float32))
+
+
+def _pr(**kw):
+    cp = compile_program(ALL["pagerank"], op_select="force:scatter", **kw)
+    cp.faults.sleep = lambda s: None
+    return cp
+
+
+def _wc(**kw):
+    cp = compile_program(ALL["word_count"], op_select="force:scatter", **kw)
+    cp.faults.sleep = lambda s: None
+    return cp
+
+
+def _bitident(a, b):
+    return all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+               for k in a)
+
+
+# ---------------------------------------------------------------------------
+# the chunking pass
+# ---------------------------------------------------------------------------
+
+def test_chunk_plan_wraps_bag_nodes():
+    ck = _wc(out_of_core="force").chunker
+    loops = [n for n in ck.plan if isinstance(n, ChunkLoop)]
+    assert len(loops) == 1
+    assert loops[0].chunk_bag == "W"
+    assert "C" in loops[0].carry
+
+
+def test_chunk_plan_recurses_into_seq_loops():
+    ck = _pr(out_of_core="force").chunker
+    assert ck.n_chunk_loops >= 2    # C outside the while, NP inside it
+    outer = [n for n in ck.plan if isinstance(n, ChunkLoop)]
+    assert outer, "degree count must stream at top level"
+
+
+def test_chunk_bodies_pin_bit_identical_backend():
+    """Streaming folds partial results chunk-by-chunk: only the direct
+    scatter left-fold commutes with that split bit-exactly, so chunk
+    bodies pin backend=scatter and salt=1 regardless of op_select."""
+    cp = compile_program(ALL["word_count"])  # selector free to pick sort
+    for node in P.flatten(cp.chunker.plan):
+        if isinstance(node, ChunkLoop):
+            for inner in P.flatten(node.body):
+                if isinstance(inner, P.SegmentReduce):
+                    assert inner.backend == "scatter"
+                    assert inner.salt == 1
+
+
+def test_choose_chunk_rows_fits_budget():
+    cp = _wc()
+    est = cp.estimate_memory(wc_inputs())
+    rows = choose_chunk_rows(est, est.fixed_bytes + 64 * est.per_row("W"),
+                             n_rows=1024)
+    assert 1 <= rows <= 64
+    assert est.fixed_bytes + rows * est.per_row("W") <= \
+        est.fixed_bytes + 64 * est.per_row("W")
+    # a roomy budget clamps to the full bag, a hopeless one to 1 row
+    assert choose_chunk_rows(est, 10 ** 12, n_rows=1024) == 1024
+    assert choose_chunk_rows(est, 0, n_rows=1024) == 1
+
+
+# ---------------------------------------------------------------------------
+# bit-identity
+# ---------------------------------------------------------------------------
+
+def test_word_count_chunked_bitwise_vs_run():
+    ref = _wc().run(wc_inputs())
+    for tile in (1024, 100, 17):
+        out = _wc(out_of_core="force", chunk_rows=tile).run(wc_inputs())
+        assert _bitident(ref, out), tile
+
+
+def test_pagerank_chunked_bitwise_vs_stepwise():
+    """All tile sizes — including a non-divisor (7) exercising the padded
+    last tile — reproduce the all-resident host-driven run bit-exactly."""
+    ref = _pr().run_stepwise(pr_inputs(steps=5.0))
+    for tile in (512, 100, 64, 7):
+        out = _pr(out_of_core="force", chunk_rows=tile).run(
+            pr_inputs(steps=5.0))
+        assert _bitident(ref, out), tile
+
+
+def test_ten_x_over_budget_completes():
+    """The acceptance scenario: an edge bag ~10× the simulated budget
+    streams to the bit-identical answer, with the chosen tile keeping
+    fixed + tile·per_row within budget (peak O(tile + dests))."""
+    ins = pr_inputs(steps=3.0)
+    probe = _pr()
+    est = probe.estimate_memory(ins)
+    budget = est.fixed_bytes + est.bag_bytes["E"] // 10
+    cp = _pr(memory_budget=budget)
+    assert cp._ooc_admits(ins)
+    rows = cp._initial_chunk_rows(ins)
+    assert est.fixed_bytes + rows * est.per_row("E") <= budget
+    out = cp.run(ins)
+    ref = _pr().run_stepwise(pr_inputs(steps=3.0))
+    assert _bitident(ref, out)
+    assert cp.faults.counters["admission"] >= 1
+    wc = _wc(memory_budget=400)      # W is 4KiB — 10× over
+    out2 = wc.run(wc_inputs())
+    assert _bitident(_wc().run(wc_inputs()), out2)
+
+
+def test_admission_is_visible():
+    cp = _wc(memory_budget=400)
+    cp.run(wc_inputs())
+    text = cp.explain_faults()
+    assert "admission" in text and "chunked" in text
+    assert "budget" in cp.explain_memory(wc_inputs())
+    assert "[chunked]" in cp.explain_chunked()
+
+
+def test_off_disables_admission():
+    cp = _wc(memory_budget=400, out_of_core="off")
+    assert not cp._ooc_admits(wc_inputs())
+    assert _bitident(_wc().run(wc_inputs()), cp.run(wc_inputs()))
+
+
+# ---------------------------------------------------------------------------
+# the ladder: capacity → chunked, halving, retries
+# ---------------------------------------------------------------------------
+
+def test_capacity_at_whole_descends_to_chunked():
+    cp = _wc()
+    with F.inject(F.FaultSpec("lower.whole_trace", "capacity", nth=1,
+                              times=10 ** 6)):
+        out = cp.run(wc_inputs())
+    assert _bitident(_wc().run(wc_inputs()), out)
+    assert cp.faults.level_reached == "chunked"
+    text = cp.explain_faults()
+    assert "whole->chunked" in text and "recover" in text
+    assert "whole->eager" not in text
+
+
+def test_capacity_at_eager_descends_to_chunked():
+    cp = _wc()
+    with F.inject(F.FaultSpec("lower.whole_trace", "deterministic", nth=1),
+                  F.FaultSpec("lower.node", "capacity", nth=1)):
+        out = cp.run(wc_inputs())
+    assert _bitident(_wc().run(wc_inputs()), out)
+    assert "eager->chunked" in cp.explain_faults()
+
+
+def test_capacity_mid_stream_halves_the_tile():
+    cp = _wc(out_of_core="force", chunk_rows=256)
+    with F.inject(F.FaultSpec("lower.chunk_step", "capacity", nth=2)):
+        out = cp.run(wc_inputs())
+    assert _bitident(_wc().run(wc_inputs()), out)
+    text = cp.explain_faults()
+    assert "chunked[256]->chunked[128]" in text
+    assert cp.faults.level_reached == "chunked[128]"
+
+
+def test_repeated_capacity_keeps_halving():
+    cp = _wc(out_of_core="force", chunk_rows=64)
+    with F.inject(F.FaultSpec("lower.chunk_step", "capacity", nth=1,
+                              times=3)):
+        out = cp.run(wc_inputs())
+    assert _bitident(_wc().run(wc_inputs()), out)
+    text = cp.explain_faults()
+    assert "chunked[64]->chunked[32]" in text
+    assert "chunked[32]->chunked[16]" in text
+
+
+def test_transient_at_chunk_boundary_retries_in_place():
+    cp = _wc(out_of_core="force", chunk_rows=128)
+    with F.inject(F.FaultSpec("lower.chunk_step", "transient", nth=3)) \
+            as inj:
+        out = cp.run(wc_inputs())
+    assert inj.fired
+    assert _bitident(_wc().run(wc_inputs()), out)
+    assert cp.faults.counters["retry"] >= 1
+    assert cp.faults.counters["descend"] == 0
+
+
+def test_transient_mid_prefetch_retries_in_place():
+    cp = _wc(out_of_core="force", chunk_rows=128)
+    with F.inject(F.FaultSpec("lower.chunk_prefetch", "transient",
+                              nth=2)) as inj:
+        out = cp.run(wc_inputs())
+    assert inj.fired
+    assert _bitident(_wc().run(wc_inputs()), out)
+    assert cp.faults.counters["retry"] >= 1
+
+
+def test_deterministic_in_stream_surfaces():
+    cp = _wc(out_of_core="force", chunk_rows=128)
+    with pytest.raises(F.DeterministicFault):
+        with F.inject(F.FaultSpec("lower.chunk_step", "deterministic",
+                                  nth=2, times=10 ** 6)):
+            cp.run(wc_inputs())
+
+
+def test_pagerank_capacity_descent_is_bitwise_stepwise():
+    """whole → chunked must hold the STEPWISE identity even for a looped
+    program (the chunked executor is host-driven like run_stepwise)."""
+    cp = _pr()
+    with F.inject(F.FaultSpec("lower.whole_trace", "capacity", nth=1,
+                              times=10 ** 6)):
+        out = cp.run(pr_inputs())
+    ref = _pr().run_stepwise(pr_inputs())
+    assert _bitident(ref, out)
+    assert cp.faults.level_reached == "chunked"
+
+
+# ---------------------------------------------------------------------------
+# chunk-granular checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def test_killed_chunked_run_resumes_from_chunk_checkpoint(tmp_path):
+    ref = _pr(out_of_core="force", chunk_rows=64).run(pr_inputs(steps=5.0))
+
+    cp = _pr(out_of_core="force", chunk_rows=64)
+    runner = LoopRunner(cp, str(tmp_path), every=1)
+    with pytest.raises(F.DeterministicFault):
+        with F.inject(F.FaultSpec("lower.chunk_step", "deterministic",
+                                  nth=5, times=10 ** 6)):
+            runner.run(pr_inputs(steps=5.0), resume=False)
+    assert runner.saves >= 1
+
+    cp2 = _pr(out_of_core="force", chunk_rows=64)
+    runner2 = LoopRunner(cp2, str(tmp_path), every=1)
+    out = runner2.run(pr_inputs(steps=5.0), resume=True)
+    assert runner2.resumed_from is not None
+    assert _bitident(ref, out)
+
+
+def test_resume_skips_completed_chunks(tmp_path):
+    """The fast-forward is real: the resumed run must execute fewer
+    chunks of the killed loop than a cold run would."""
+    ins = wc_inputs(n=1024)
+    cp = _wc(out_of_core="force", chunk_rows=128)   # 8 chunks
+    runner = LoopRunner(cp, str(tmp_path), every=1)
+    with pytest.raises(F.DeterministicFault):
+        with F.inject(F.FaultSpec("lower.chunk_step", "deterministic",
+                                  nth=6, times=10 ** 6)):
+            runner.run(ins, resume=False)
+
+    cp2 = _wc(out_of_core="force", chunk_rows=128)
+    runner2 = LoopRunner(cp2, str(tmp_path), every=1)
+    out = runner2.run(ins, resume=True)
+    assert _bitident(_wc().run(wc_inputs(n=1024)), out)
+    assert cp2.chunker.chunks_run < 8

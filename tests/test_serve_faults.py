@@ -275,3 +275,82 @@ def test_chaos_gate_64_clients_10pct_transients():
         + s["seq_fallbacks"] == s["completed"]
     text = srv.explain_serving()
     assert "robustness:" in text and "poisoned=1" in text
+
+
+# ---------------------------------------------------------------------------
+# memory-aware admission (DESIGN.md §12): queue or shed, never OOM a flush
+# ---------------------------------------------------------------------------
+
+def _bucket_peak():
+    """Estimated device bytes for one lane of the 20-row group_by
+    bucket (padded to the bucket edge) — the unit the lane cap divides."""
+    srv = server(memory_budget=10 ** 12)
+    srv.submit("group_by", gb_inputs(20, 0))
+    srv.drain()
+    return next(iter(srv.stats()["buckets"].values()))["est_peak"]
+
+
+def test_memory_budget_caps_flush_lanes():
+    """budget = 3 lanes: 8 concurrent requests flush as 3+3+2 — every
+    request still completes bit-identically, the overflow WAITS instead
+    of riding a batch projected past the budget."""
+    peak = _bucket_peak()
+    ref = {i: cp().run(gb_inputs(20, i)) for i in range(8)}
+    srv = server(memory_budget=3 * peak)
+    ts = [srv.submit("group_by", gb_inputs(20, i)) for i in range(8)]
+    srv.drain()
+    s = srv.stats()
+    b = next(iter(s["buckets"].values()))
+    assert b["lane_cap"] == 3
+    assert s["completed"] == 8 and s["failed"] == 0
+    assert s["flushes"] == 3
+    assert s["mem_deferred"] > 0 and s["mem_shed"] == 0
+    assert all(np.array_equal(t.output["C"], ref[i]["C"])
+               for i, t in enumerate(ts))
+    assert "memory: budget=" in srv.explain_serving()
+    assert srv.faults.counters["defer"] >= 1
+
+
+def test_oversize_request_sheds_with_capacity_error():
+    """A single lane over budget can never be served by batching less:
+    it sheds with a RESOURCE_EXHAUSTED error that classify() reads as
+    capacity — pointing the caller at the out-of-core run() path."""
+    peak = _bucket_peak()
+    srv = server(memory_budget=peak // 2)
+    t = srv.submit("group_by", gb_inputs(20, 0))
+    srv.drain()
+    s = srv.stats()
+    assert t.state == "failed"
+    assert s["mem_shed"] == 1 and s["failed"] == 1
+    with pytest.raises(RuntimeError, match="RESOURCE_EXHAUSTED"):
+        t.result(0)
+    try:
+        t.result(0)
+    except RuntimeError as ex:
+        assert F.classify(ex) == "capacity"
+    assert srv.faults.counters["shed"] == 1
+    assert "mem_shed=1" in srv.explain_serving()
+
+
+def test_lane_rounding_never_exceeds_cap():
+    """batch_round pads lanes up to a power of two — but a dummy lane
+    costs real device bytes, so rounding must respect the cap too."""
+    peak = _bucket_peak()
+    srv = server(memory_budget=3 * peak, batch_round=True)
+    ts = [srv.submit("group_by", gb_inputs(20, i)) for i in range(3)]
+    srv.drain()
+    s = srv.stats()
+    assert all(t.state == "done" for t in ts)
+    lanes = sum(b.lanes for b in srv._buckets.values())
+    assert lanes <= 3                  # NOT rounded up to 4
+
+
+def test_no_budget_means_no_caps():
+    srv = server()
+    ts = [srv.submit("group_by", gb_inputs(20, i)) for i in range(8)]
+    srv.drain()
+    s = srv.stats()
+    b = next(iter(s["buckets"].values()))
+    assert b["lane_cap"] is None and b["est_peak"] is None
+    assert s["flushes"] == 1 and s["completed"] == 8
+    assert "memory:" not in srv.explain_serving()

@@ -50,6 +50,16 @@ def scenarios():
             cp.run(_inputs())
         return cp.explain_faults()
 
+    def capacity_chunked():
+        from repro.core import compile_program
+        from repro.core.programs import ALL
+        cp = compile_program(ALL["group_by"], op_select="force:scatter")
+        cp.faults.sleep = lambda s: None
+        with F.inject(F.FaultSpec("lower.whole_trace", "capacity", nth=1,
+                                  times=10 ** 4)):
+            cp.run(_inputs())
+        return cp.explain_faults() + "\n" + cp.explain_chunked()
+
     def interp_oracle():
         cp = _fresh_cp()
         cp.faults.sleep = lambda s: None
@@ -80,6 +90,8 @@ def scenarios():
              transient_retry),
             ("deterministic at lower.whole_trace: one descent to eager",
              deterministic_descent),
+            ("capacity at lower.whole_trace: out-of-core chunked rung",
+             capacity_chunked),
             ("persistent transient at lower.node: interpreter oracle",
              interp_oracle),
             ("serve chaos: retry + bisection + poisoned lane",
