@@ -41,6 +41,14 @@ Sections:
             device budget (bit-identity asserted); emits
             BENCH_outofcore.json; --check fails when the 10x-over-budget
             run costs > 2.5x the all-resident run (chaos CI)
+  [recovery] recovery-tier cost (DESIGN.md §13): mid-loop shard loss
+            recovered by lineage recompute vs fault-free vs lineage-off
+            ladder restart, plus speculative straggler re-execution on
+            the injected clock — measured in a fresh subprocess that
+            forces 8 host devices; emits BENCH_recovery.json; --check
+            fails when the recovered run costs > 1.5x fault-free or the
+            speculated straggler's effective completion is > 2x the
+            straggler-free run (chaos CI)
 """
 from __future__ import annotations
 
@@ -121,12 +129,16 @@ def main() -> None:
     ap.add_argument("--outofcore-json-out", default=os.path.join(
         _REPO, "BENCH_outofcore.json"),
         help="outofcore artifact path ('' disables)")
+    ap.add_argument("--recovery-json-out", default=os.path.join(
+        _REPO, "BENCH_recovery.json"),
+        help="recovery artifact path ('' disables)")
     args = ap.parse_args()
     sections = args.sections.split(",")
     if args.check and not {"fig3", "dist", "skew", "serve",
-                           "faults", "outofcore"} & set(sections):
+                           "faults", "outofcore",
+                           "recovery"} & set(sections):
         ap.error("--check gates fig3, dist, skew, serve, faults, "
-                 "and/or outofcore: "
+                 "outofcore, and/or recovery: "
                  "include one in --sections")
 
     if {"dist", "skew"} & set(sections):
@@ -385,6 +397,33 @@ def main() -> None:
             print(f"[outofcore] wrote {args.outofcore_json_out}")
         if args.check and outofcore_bench.check_rows(rows):
             check_failed = True
+
+    if "recovery" in sections:
+        import subprocess
+        from benchmarks import recovery_bench
+        print("[recovery] lineage shard recovery vs fault-free vs "
+              "lineage-off restart, + speculative stragglers "
+              "(DESIGN.md §13; fresh subprocess, forced host devices)")
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.recovery_bench", "--dist"],
+            capture_output=True, text=True, cwd=_REPO, timeout=1800)
+        rrows = None
+        for line in r.stdout.splitlines():
+            if line.startswith(recovery_bench._MARKER):
+                rrows = json.loads(line[len(recovery_bench._MARKER):])
+        if rrows is None:
+            print("[recovery] measurement subprocess FAILED:\n"
+                  + r.stdout[-2000:] + r.stderr[-2000:])
+            check_failed = True
+        else:
+            recovery_bench.print_rows(rrows)
+            print()
+            if args.recovery_json_out:
+                with open(args.recovery_json_out, "w") as f:
+                    json.dump(recovery_bench.to_json(rrows), f, indent=1)
+                print(f"[recovery] wrote {args.recovery_json_out}")
+            if args.check and recovery_bench.check_rows(rrows):
+                check_failed = True
 
     if check_failed:
         sys.exit(1)

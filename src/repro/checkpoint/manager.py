@@ -7,6 +7,10 @@ Design for 1000+ nodes (documented; exercised at container scale):
 * **Atomic**: write to `step_XXXX.tmp/` then rename; a crash mid-write
   never corrupts the newest valid checkpoint; `latest()` scans only
   completed directories.
+* **Verified**: every snapshot carries per-array crc32 stamps
+  (`checksums.json`, the shared `core.faults.checksum`, same stamp the
+  peer-replica tier uses); `latest()` verifies and SKIPS a torn/corrupted
+  snapshot to the previous good one instead of restoring garbage.
 * **Async**: the device→host copy is synchronous (cheap, avoids donation
   races), the disk write happens on a background thread so the train loop
   isn't stalled on I/O.
@@ -52,6 +56,7 @@ class CheckpointManager:
         self.dir = directory
         self.keep = keep
         self.async_write = async_write
+        self.skipped: list[int] = []    # steps latest() refused to restore
         self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
 
@@ -64,12 +69,19 @@ class CheckpointManager:
         }
         meta = {"step": int(step), "extra": extra or {}}
 
+        from repro.core.faults import checksum
+        sums = {fname: {k: checksum(v) for k, v in snap[part].items()}
+                for part, fname in (("params", "params.npz"),
+                                    ("opt", "opt.npz"))}
+
         def write():
             tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
             final = os.path.join(self.dir, f"step_{step:08d}")
             os.makedirs(tmp, exist_ok=True)
             np.savez(os.path.join(tmp, "params.npz"), **snap["params"])
             np.savez(os.path.join(tmp, "opt.npz"), **snap["opt"])
+            with open(os.path.join(tmp, "checksums.json"), "w") as f:
+                json.dump(sums, f)
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
             if os.path.exists(final):
@@ -102,9 +114,38 @@ class CheckpointManager:
                 out.append(int(d.split("_")[1]))
         return sorted(out)
 
+    def verify(self, step: int) -> bool:
+        """Check every array in the snapshot against its crc32 stamp.
+        Pre-checksum snapshots (no checksums.json) are accepted as-is —
+        the stamp protects against torn/corrupted bytes, and a legacy
+        snapshot's absence of stamps is not evidence of either."""
+        from repro.core.faults import checksum
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        cpath = os.path.join(d, "checksums.json")
+        if not os.path.exists(cpath):
+            return True
+        try:
+            with open(cpath) as f:
+                sums = json.load(f)
+            for fname, keys in sums.items():
+                zf = np.load(os.path.join(d, fname))
+                for k, crc in keys.items():
+                    if checksum(zf[k]) != int(crc):
+                        return False
+        except Exception:               # noqa: BLE001 — torn bytes, any form
+            return False
+        return True
+
     def latest(self) -> int | None:
-        s = self.steps()
-        return s[-1] if s else None
+        """Newest snapshot that VERIFIES.  A torn or bit-flipped snapshot
+        is skipped (recorded in `self.skipped`) and the previous good one
+        is returned instead — restoring garbage is strictly worse than
+        restoring slightly older state."""
+        for s in reversed(self.steps()):
+            if self.verify(s):
+                return s
+            self.skipped.append(s)
+        return None
 
     def restore(self, step: int, params_template, opt_template=None,
                 shardings=None):

@@ -97,6 +97,8 @@ REP-everything — the pre-analysis behaviour and the ⊥ of the lattice.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -182,6 +184,18 @@ class DistributedProgram:
         self.faults = cp.faults
         self.policy = cp.policy
         self._force_rep = False
+        # ---- surgical recovery (DESIGN.md §13) ----
+        # shard index → faults.clock() time of its LAST loss: a second
+        # loss of the same shard inside policy.shard_loss_ttl_s means the
+        # worker is flapping — escalate to the ladder instead of
+        # recomputing onto a corpse again.  Deliberately NOT reset per
+        # run: flapping spans runs.
+        self._shard_loss: dict = {}
+        self.lineage_enabled = getattr(cp.config, "lineage", True)
+        # straggler speculation: ≤1 backup execution per straggling round
+        # label per run (first finisher wins, loser cancelled)
+        self.speculative = getattr(cp.config, "speculative", True)
+        self._spec_done: set = set()
 
     def _placed_oned(self, name) -> bool:
         # ONED_VAR counts: variable-length arrays still shard as equal
@@ -362,11 +376,16 @@ class DistributedProgram:
             self._round_traces += 1
         else:
             self._round_hits += 1
-        env[dest] = fn(env[dest])
+        prev = env[dest]
+        env[dest] = fn(prev)
         counts, factor = self._shard_counts(npad, lim)
         self._strategy[id(node)] = (
             f"rebalance(size-exchange psum + all-to-all psum_scatter)"
             f"→{dest}; rows/shard={counts} balance={factor:.2f}")
+        self._shard_lost_site(
+            node, "rebalance", env, [(dest, "rebalance")], {dest: prev},
+            lambda _fn=fn, _p=prev: {dest: _fn(_p)},
+            unit="rebalance round")
 
     # ---- per-node round classification (runtime shape guards) ----
     def _rows(self, name, env) -> int:
@@ -531,14 +550,42 @@ class DistributedProgram:
         level (bounded, backoff), and the wall time feeds the straggler
         watchdog.  Capacity/deterministic errors re-raise — descending is
         the caller's move (per-member bail for fused, the run() ladder
-        for rounds)."""
+        for rounds).
+
+        A flagged straggler additionally triggers speculative
+        re-execution (DESIGN.md §13): at most ONE backup copy of the
+        flagged round per label per run, first finisher wins, the loser
+        is cancelled.  Both copies run the same traced executable on the
+        same operands, so adopting the faster one never changes results —
+        speculation only buys back the tail latency a slow worker cost."""
         def attempt():
             F.site(site_name, label=label)
             return fn(*args)
         t0 = self.faults.clock()
         out = F.run_with_retries(attempt, policy=self.policy,
                                  ledger=self.faults, label=label)
-        self.faults.note_time(label, self.faults.clock() - t0)
+        dt = self.faults.clock() - t0
+        straggled = self.faults.note_time(label, dt)
+        if straggled and self.speculative and label not in self._spec_done:
+            self._spec_done.add(label)
+            t1 = self.faults.clock()
+            backup = fn(*args)        # no injection site: the backup runs
+            #                           on a different (healthy) worker
+            dt2 = self.faults.clock() - t1
+            if dt2 < dt:
+                saved = dt - dt2
+                self.faults.spec_saved_s += saved
+                self.faults.record(
+                    "speculative", label,
+                    f"backup won: {dt2 * 1e3:.1f}ms vs straggler "
+                    f"{dt * 1e3:.1f}ms (saved {saved * 1e3:.1f}ms); "
+                    f"straggler copy cancelled")
+                out = backup
+            else:
+                self.faults.record(
+                    "speculative", label,
+                    f"original finished first ({dt * 1e3:.1f}ms); backup "
+                    f"cancelled after {dt2 * 1e3:.1f}ms")
         return out
 
     def _run_round(self, node, spec, env, limits, array_limits):
@@ -632,6 +679,23 @@ class DistributedProgram:
                                   for d, x in exchanges.items())),
                      tuple(sorted(salts.items())))
         rlabel = f"round:{type(node).__name__}"
+        # everything a block-restricted shard recompute of THIS round
+        # needs (surgical recovery, DESIGN.md §13)
+        rec = {"spec": spec, "names": tuple(names),
+               "bagnames": frozenset(bagnames),
+               "store_dests": tuple(store_dests), "dims": dims,
+               "node_lims": node_lims, "arr_lims": arr_lims,
+               "salts": salts}
+
+        def replay(_fn=None, _args=tuple(args), _parts=parts,
+                   _kinds=kinds):
+            res2 = _fn(*_args)
+            out2 = {}
+            for p, k2, r in zip(_parts, _kinds, res2):
+                out2[p.dest] = r if k2 == "store" else \
+                    COMBINE[p.op](jnp.asarray(pre[p.dest]), r)
+            return out2
+
         fn = self._round_cache.get(cache_key)
         if fn is not None:
             self._round_hits += 1
@@ -640,7 +704,12 @@ class DistributedProgram:
             # exactly what was traced, whatever happened in between
             self._strategy[id(node)] = self._strategy_by_key[cache_key]
             self._decisions.update(self._round_notes[cache_key])
-            return self._apply(parts, kinds, results, env)
+            pre = {p.dest: env[p.dest] for p in parts}
+            self._apply(parts, kinds, results, env)
+            self._shard_lost_site(
+                node, rlabel, env, list(zip(dests, kinds)), pre,
+                partial(replay, _fn=fn), rec)
+            return
 
         # trace-time only (cache hits skip it, like the trace itself):
         # record the round strategy + slice certificates for explain_rounds
@@ -715,7 +784,10 @@ class DistributedProgram:
         self._round_notes[cache_key] = notes
         self._decisions.update(notes)
         self._strategy_by_key[cache_key] = self._strategy[id(node)]
+        pre = {p.dest: env[p.dest] for p in parts}
         self._apply(parts, kinds, results, env)
+        self._shard_lost_site(node, rlabel, env, list(zip(dests, kinds)),
+                              pre, partial(replay, _fn=fn), rec)
 
     def _round_desc(self, parts, kinds, axis, exchanges, dest_oned,
                     gathered, local) -> str:
@@ -954,8 +1026,15 @@ class DistributedProgram:
                 return bail()
             self._strategy.update(self._strategy_by_key[cache_key])
             self._decisions.update(self._round_notes[cache_key])
+            pre = {d: env[d] for d in dests_order}
             for d, res in zip(dests_order, results):
                 env[d] = res
+            self._shard_lost_site(
+                region, "fused", env,
+                [(d, "fused") for d in dests_order], pre,
+                lambda _fn=fn, _a=tuple(args):
+                    dict(zip(dests_order, _fn(*_a))),
+                unit="fused loop" if loop is not None else "fused region")
             return True
 
         # trace-time: record the region + per-member strategies
@@ -1135,8 +1214,13 @@ class DistributedProgram:
         self._round_notes[cache_key] = notes
         self._decisions.update(notes)
         self._strategy_by_key[cache_key] = strat
+        pre = {d: env[d] for d in dests_order}
         for d, res in zip(dests_order, results):
             env[d] = res
+        self._shard_lost_site(
+            region, "fused", env, [(d, "fused") for d in dests_order], pre,
+            lambda _fn=fn, _a=tuple(args): dict(zip(dests_order, _fn(*_a))),
+            unit="fused loop" if loop is not None else "fused region")
         return True
 
     def _part_notes(self, node) -> dict:
@@ -1162,6 +1246,182 @@ class DistributedProgram:
                 env[p.dest] = res
             else:
                 env[p.dest] = COMBINE[p.op](jnp.asarray(env[p.dest]), res)
+
+    # ------------- surgical shard recovery (DESIGN.md §13) -------------
+    def _shard_lost_site(self, node, rlabel, env, writes, pre, replay,
+                         rec=None, unit="round"):
+        """Fire the post-round shard-loss site (a worker dying while
+        holding the partition it just produced) and recover surgically.
+        `writes` is [(dest, kind)] for everything the round applied,
+        `pre` maps each dest to its pre-apply value (the surviving peer /
+        carry-snapshot copy recovery re-fetches), `replay` re-executes the
+        round's cached executable and returns {dest: full result}, and
+        `rec` (leaf rounds only) carries what a block-restricted host
+        recompute of shard k needs."""
+        if F.active() is None:
+            return                    # zero-cost outside the fault harness
+        try:
+            F.site("dist.shard_lost", label=rlabel)
+        except F.ShardLostFault as ex:
+            self._recover_shard(node, rlabel, env, ex, writes, pre,
+                                replay, rec, unit)
+
+    def _recover_shard(self, node, rlabel, env, ex, writes, pre, replay,
+                       rec, unit):
+        """Lineage-based recovery of ONE lost shard partition (DESIGN.md
+        §13): replicated destinations cost nothing (every survivor holds
+        a full copy); aligned stores / aligned reduces recompute ONLY
+        shard k's block from surviving inputs (1/P of the round); sharded
+        unaligned reduces and fused regions replay the cached round
+        executable and re-slice.  Every recovered block is verified
+        against the checksum the peer replica holds (covers the §3.4 mask
+        rows too — pad bytes are part of the stamp) before it is spliced
+        back.  No ladder descent — unless the same shard was already lost
+        within the policy TTL (a flapping worker) or verification fails,
+        in which case the original fault re-raises and run()'s ladder
+        takes over."""
+        lin = getattr(node, "lineage", None)
+        k = ex.shard % self.dp_n
+        now = self.faults.clock()
+        last = self._shard_loss.get(k)
+        self._shard_loss[k] = now
+        if not self.lineage_enabled or lin is None:
+            ex.escalated = True       # pre-§13 behaviour: ladder descent,
+            raise ex                  # not a same-level re-dispatch
+        if last is not None and (now - last) < self.policy.shard_loss_ttl_s:
+            self.faults.record(
+                "escalate", rlabel,
+                f"shard {k} lost twice within "
+                f"{self.policy.shard_loss_ttl_s:.0f}s TTL — flapping "
+                f"worker, recomputing onto it again is throwaway; ladder "
+                f"takes over")
+            ex.escalated = True       # run(): skip same-level re-dispatch
+            raise ex
+        lost, free = [], []
+        for dest, kind in writes:
+            if not self._placed_oned(dest):
+                free.append(dest)     # survivors hold the full copy
+                continue
+            v = jnp.asarray(env[dest])
+            blk = int(v.shape[0]) // self.dp_n
+            start = k * blk
+            crc = F.checksum(v[start:start + blk])   # the peer-held stamp
+            # the partition died with its worker: poison it so a recovery
+            # bug that reads the dead block cannot pass verification
+            env[dest] = _kill_block(v, start, blk)
+            lost.append((dest, kind, start, blk, crc))
+        if not lost:
+            self.faults.recovered(
+                rlabel,
+                f"shard {k}/{self.dp_n}: nothing to recompute — every "
+                f"written array is replicated, survivors hold full copies "
+                f"(lineage depth={lin.depth})")
+            return
+        names = ", ".join(f"{d}[{s}:{s + b}]" for d, _k2, s, b, _c in lost)
+        blocks = None
+        mode = ""
+        if rec is not None and all(k2 in ("store", "aligned")
+                                   for _d, k2, _s, _b, _c in lost):
+            try:
+                blocks = self._recompute_blocks(k, pre, env, rec)
+            except Exception:         # noqa: BLE001 — fall back to replay
+                blocks = None
+            if blocks is not None and all(
+                    F.checksum(blocks[d]) == c
+                    for d, _k2, _s, _b, c in lost):
+                mode = (f"block-restricted recompute "
+                        f"(1/{self.dp_n} of the round)")
+            else:
+                blocks = None         # bit mismatch: replay instead
+        if blocks is None:
+            full = replay()
+            blocks = {d: jnp.asarray(full[d])[s:s + b]
+                      for d, _k2, s, b, _c in lost}
+            if not all(F.checksum(blocks[d]) == c
+                       for d, _k2, _s, _b, c in lost):
+                self.faults.record(
+                    "escalate", rlabel,
+                    f"shard {k}: recovered blocks failed peer-checksum "
+                    f"verification — ladder takes over")
+                ex.escalated = True   # run(): skip same-level re-dispatch
+                raise ex
+            mode = f"replay {unit} + re-slice"
+        for d, _k2, s, b, _c in lost:
+            v = jnp.asarray(env[d])
+            env[d] = jax.lax.dynamic_update_slice_in_dim(
+                v, blocks[d].astype(v.dtype), s, axis=0)
+        reads = ", ".join(f"{a}:{k2}" for a, k2 in lin.reads) or "none"
+        self.faults.recovered(
+            rlabel,
+            f"shard {k}/{self.dp_n}: {names} via {mode}; lineage "
+            f"depth={lin.depth} (a from-scratch restart would replay "
+            f"{lin.depth} round(s)); reads[{reads}]; checksum ok"
+            + (f"; free(rep): {','.join(free)}" if free else ""))
+
+    def _recompute_blocks(self, k, pre, env, rec):
+        """Host-side mirror of the round's per-shard body for the ONE
+        concrete shard k: re-fetch its inputs (replicated arrays are free,
+        localized blocks and bag columns are sliced from the surviving
+        global copy, gathered reads use the full array any survivor
+        already materialized), rebuild the exact ExecContext the dead
+        worker ran under, and run the member nodes.  Returns {dest: block}
+        for the round's row-block destinations."""
+        cp = self.cp
+        spec = rec["spec"]
+        parts, kinds = spec["parts"], spec["kinds"]
+        axis, rng, local = spec["axis"], spec["rng"], spec["local"]
+        bagnames = rec["bagnames"]
+        e2 = dict(rec["dims"])
+        offs, row_offs = {}, {}
+        for n in rec["names"]:
+            v = env[n]
+            if n in bagnames:
+                blk_b = int(v[0].shape[0]) // self.dp_n
+                e2[n] = tuple(c[k * blk_b:(k + 1) * blk_b] for c in v)
+                offs[n] = k * blk_b
+            elif n in local:
+                blk_n = int(v.shape[0]) // self.dp_n
+                e2[n] = v[k * blk_n:(k + 1) * blk_n]
+                row_offs[n] = k * blk_n
+            else:
+                e2[n] = v             # replicated or gathered: full copy
+        for d in rec["store_dests"]:  # store operands enter as blocks
+            v = jnp.asarray(pre[d])
+            blk_d = int(v.shape[0]) // self.dp_n
+            e2[d] = v[k * blk_d:(k + 1) * blk_d]
+        axis_ov = {}
+        if rng is not None:
+            blk, lim, total = rng
+            axis_ov[axis] = (k * blk, blk, lim, total)
+        out = {}
+        for p, kind in zip(parts, kinds):
+            if not self._placed_oned(p.dest):
+                continue
+            shp = tuple(jnp.shape(pre[p.dest]))
+            dt = jnp.asarray(pre[p.dest]).dtype
+            blk0 = shp[0] // self.dp_n
+            ro = dict(row_offs)
+            cert = set(local)
+            e3 = dict(e2)
+            ro[p.dest] = k * blk0
+            cert.add(p.dest)
+            if kind == "store":
+                ctx = ExecContext(offs, rec["node_lims"], ro,
+                                  rec["arr_lims"], axis_ov,
+                                  frozenset(cert), rec["salts"])
+                out[p.dest] = cp.executor.run_node(p, e3, ctx)
+            elif kind == "aligned":
+                prev = jnp.asarray(pre[p.dest])[k * blk0:(k + 1) * blk0]
+                e3[p.dest] = jnp.full((blk0,) + tuple(shp[1:]),
+                                      identity(p.op, dt))
+                ctx = ExecContext(offs, rec["node_lims"], ro,
+                                  rec["arr_lims"], axis_ov,
+                                  frozenset(cert), rec["salts"])
+                res = cp.executor.run_node(p, e3, ctx)
+                out[p.dest] = COMBINE[p.op](prev, res)
+            else:                     # unaligned reduce: replay instead
+                return None
+        return out
 
     # ------------------------- explain -------------------------
     def explain_rounds(self) -> str:
@@ -1244,6 +1504,26 @@ class DistributedProgram:
         except Exception as ex:          # noqa: BLE001 — ladder descent
             if F.classify(ex) == "capacity":
                 return self._descend_capacity("rounds", inputs, ex)
+            if F.classify(ex) == "shard_lost" \
+                    and not getattr(ex, "escalated", False):
+                # MID-round loss (the worker died before its outputs
+                # applied — nothing to recompute): the program's inputs
+                # survive on the host, so ONE same-level re-dispatch
+                # re-places them onto the surviving pool before any
+                # ladder descent.  Escalated post-round losses (flapping
+                # worker, failed verification) skip this and descend.
+                try:
+                    out = self._run_once(inputs)
+                    self.faults.recovered(
+                        "dist",
+                        "mid-round shard loss: same-level re-dispatch "
+                        "onto the surviving pool (inputs survive on the "
+                        "host; no round output was lost)")
+                    return out
+                except Exception as ex2:  # noqa: BLE001 — ladder descent
+                    ex = ex2
+                    if F.classify(ex) == "capacity":
+                        return self._descend_capacity("rounds", inputs, ex)
             self.faults.descend("rounds", "rep", ex)
             if F.classify(ex) == "deterministic":
                 out = self._run_once(inputs, force_rep=True)
@@ -1279,6 +1559,7 @@ class DistributedProgram:
     def _run_once(self, inputs: dict, force_rep: bool = False) -> dict:
         env = {}
         self._fused_bail = set()     # placements/shapes are per-run
+        self._spec_done = set()      # speculation budget is per run
         self._force_rep = force_rep
         try:
             placed, limits, array_limits = self.place(inputs)
@@ -1321,6 +1602,21 @@ class DistributedProgram:
             lim = array_limits.get(n)
             out[n] = v if lim is None else v[:lim]   # drop pad rows
         return out
+
+
+def _kill_block(v, start, blk):
+    """Destroy rows [start, start+blk): the partition died with its
+    worker.  Poisoned with NaN / an integer sentinel rather than left
+    stale so that any recovery path reading the dead block fails the
+    peer-checksum verification instead of silently passing."""
+    if jnp.issubdtype(v.dtype, jnp.floating):
+        fill = jnp.nan
+    elif jnp.issubdtype(v.dtype, jnp.integer):
+        fill = jnp.iinfo(v.dtype).min
+    else:
+        fill = 0
+    dead = jnp.full((blk,) + tuple(v.shape[1:]), fill, v.dtype)
+    return jax.lax.dynamic_update_slice_in_dim(v, dead, start, axis=0)
 
 
 def _gather_names(node) -> frozenset:

@@ -15,7 +15,9 @@ substrate, split into three pieces every layer shares:
   deterministic — tests replay exact schedules.
 
 * **Classifier + retry policy** — `classify(exc)` sorts any exception
-  into transient / capacity / deterministic; `run_with_retries` retries
+  into transient / capacity / deterministic / shard_lost (a peer died
+  holding data → the surgical-recovery lane, DESIGN.md §13);
+  `run_with_retries` retries
   transients at the SAME ladder level with bounded exponential backoff,
   and re-raises everything else for the caller to descend the ladder.
   Deterministic errors get AT MOST one ladder descent before they
@@ -32,11 +34,24 @@ from __future__ import annotations
 
 import re
 import time
+import zlib
 from collections import Counter
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 import numpy as np
+
+
+def checksum(x) -> int:
+    """crc32 integrity stamp over an array's dtype, shape and raw bytes —
+    the ONE checksum every robustness tier shares: checkpoint snapshots
+    (checkpoint/manager.py), peer-replicated loop carries (runtime/ft.py)
+    and shard-recovery verification (distributed._recover_shard) all stamp
+    and verify with this, so a block recovered from any tier checks out
+    against a stamp taken by any other."""
+    a = np.asarray(x)
+    h = zlib.crc32(str((a.dtype.str, a.shape)).encode())
+    return zlib.crc32(np.ascontiguousarray(a).tobytes(), h) & 0xFFFFFFFF
 
 # every named injection site threaded through the system; `site()`
 # rejects names outside this registry so a renamed call-site cannot
@@ -53,9 +68,14 @@ SITES = frozenset({
     "serve.batched_call",    # vmapped whole-program dispatch
     "lower.chunk_step",      # out-of-core chunk step dispatch (chunked.py)
     "lower.chunk_prefetch",  # out-of-core tile host→device prefetch
+    "dist.shard_lost",       # post-round shard-partition loss (surgical
+    #                          recovery, DESIGN.md §13) — fires AFTER a
+    #                          round executed, modelling a worker dying
+    #                          while holding its output partition
 })
 
-KINDS = ("transient", "capacity", "deterministic", "poison", "slow")
+KINDS = ("transient", "capacity", "deterministic", "poison", "slow",
+         "shard_lost")
 
 
 class FaultError(Exception):
@@ -75,6 +95,18 @@ class DeterministicFault(FaultError):
     most one ladder descent."""
 
 
+class ShardLostFault(FaultError):
+    """A shard's output partition was lost after a round executed (worker
+    death).  `shard` is the lost partition index; the distributed executor
+    recovers it surgically from lineage (DESIGN.md §13) instead of
+    descending the ladder — unless the same shard was already lost within
+    the policy TTL."""
+
+    def __init__(self, msg: str, shard: int = 0):
+        super().__init__(msg)
+        self.shard = int(shard)
+
+
 class PoisonedOutput(Exception):
     """A served lane carried non-finite values (serve nan_guard)."""
 
@@ -87,7 +119,8 @@ class FaultSpec:
     site's payload (serving sites pass `rids`), up to `times` firings —
     that is how a single poisoned request deterministically fails every
     batch it rides in.  `delay_s` is the injected-clock advance of a
-    `slow` spec; `message` overrides the raised text."""
+    `slow` spec; `message` overrides the raised text; `shard` is the
+    partition index a `shard_lost` spec kills."""
 
     site: str
     kind: str = "transient"
@@ -96,6 +129,7 @@ class FaultSpec:
     rid: int | None = None
     delay_s: float = 0.0
     message: str = ""
+    shard: int = 0
 
     def __post_init__(self):
         if self.site not in SITES:
@@ -115,6 +149,10 @@ class RetryPolicy:
     max_backoff_s: float = 0.5
     disable_ttl: int = 8       # eager runs a failed whole signature sits
     #                            out before its trace is re-attempted
+    shard_loss_ttl_s: float = 60.0   # a SECOND loss of the same shard
+    #                            within this window escalates to the
+    #                            ladder (the "worker" is flapping —
+    #                            recomputing onto it again is throwaway)
 
 
 class FaultInjector:
@@ -168,6 +206,8 @@ class FaultInjector:
             raise TransientFault(f"UNAVAILABLE: {msg}")
         if s.kind == "capacity":
             raise CapacityFault(f"RESOURCE_EXHAUSTED: {msg}")
+        if s.kind == "shard_lost":
+            raise ShardLostFault(f"shard {s.shard} lost: {msg}", s.shard)
         raise DeterministicFault(msg)
 
 
@@ -217,6 +257,13 @@ _CAPACITY_TOKENS = ("resource_exhausted", "resource exhausted",
 # "OOM" only as a standalone word — a bare substring would classify
 # "bloom rebuild failed" as capacity
 _OOM_WORD = re.compile(r"(?<![A-Za-z0-9])OOM(?![A-Za-z0-9])", re.IGNORECASE)
+# real runtime errors that mean a peer/device DIED holding data — the
+# surgical-recovery lane (DESIGN.md §13), distinct from transients (the
+# data is gone, a same-level retry reads from a corpse) and from
+# capacity (nothing is over budget)
+_SHARD_LOST_TOKENS = ("device lost", "device unavailable",
+                      "device_unavailable", "worker lost", "peer down",
+                      "data transfer failed", "slice has been terminated")
 # exception TYPES that mean capacity regardless of message wording:
 # jaxlib's XlaRuntimeError subclasses (XlaRuntimeError itself carries the
 # status token, but backends also raise dedicated OOM types), numpy's
@@ -237,6 +284,8 @@ def classify(exc: BaseException) -> str:
     exhibit."""
     if isinstance(exc, TransientFault):
         return "transient"
+    if isinstance(exc, ShardLostFault):
+        return "shard_lost"
     if isinstance(exc, CapacityFault) or isinstance(exc, MemoryError):
         return "capacity"
     if isinstance(exc, DeterministicFault):
@@ -247,6 +296,8 @@ def classify(exc: BaseException) -> str:
     low = s.lower()
     if any(t in low for t in _CAPACITY_TOKENS) or _OOM_WORD.search(s):
         return "capacity"
+    if any(t in low for t in _SHARD_LOST_TOKENS):
+        return "shard_lost"
     if any(t in s for t in _TRANSIENT_TOKENS):
         return "transient"
     return "deterministic"
@@ -273,6 +324,10 @@ class FaultLedger:
         self.clock = time.monotonic
         self.sleep = time.sleep
         self._times: list[float] = []
+        self._last_med = 0.0           # trailing median at the last
+        #                                straggler firing (speculation math)
+        self.spec_saved_s = 0.0        # wall time the speculative copies
+        #                                won back (bench accounting)
         self.level_reached = ""        # deepest ladder level this program
         #                                ever descended to
 
@@ -293,16 +348,31 @@ class FaultLedger:
     def recover(self, label: str) -> None:
         self.record("recover", label)
 
-    def note_time(self, label: str, dt: float) -> None:
+    def recovered(self, label: str, detail: str = "") -> None:
+        """Surgical shard recovery (lineage recompute / peer replica /
+        speculative win) — distinct from `recover`, which marks a
+        same-level RETRY succeeding."""
+        self.record("recovered", label, detail)
+
+    def note_time(self, label: str, dt: float) -> bool:
         """Straggler watchdog: a round exceeding straggler_factor × the
-        trailing-median round time is an event (TrainRunner idiom)."""
+        trailing-median round time is an event (TrainRunner idiom).
+        Returns True when the sample straggled.  A flagged sample is NOT
+        folded into the trailing window — one genuine straggler must not
+        drag the median up and mask the next one (two consecutive slow
+        rounds both flag)."""
         window = self._times[-20:]
+        straggled = False
         if len(window) >= 3:
             med = sorted(window)[len(window) // 2]
             if med > 0 and dt > self.straggler_factor * med:
+                self._last_med = med
                 self.record("straggler", label,
                             f"{dt * 1e3:.1f}ms vs median {med * 1e3:.1f}ms")
-        self._times.append(dt)
+                straggled = True
+        if not straggled:
+            self._times.append(dt)
+        return straggled
 
     def explain(self) -> str:
         """Golden-testable text form, the way explain()/explain_rounds()
@@ -311,6 +381,10 @@ class FaultLedger:
         out = [f"== fault ledger: {self.name} ==",
                f"retries={c['retry']} descents={c['descend']} "
                f"recoveries={c['recover']} stragglers={c['straggler']}"
+               + (f" shard-recovered={c['recovered']}"
+                  if c["recovered"] else "")
+               + (f" speculative={c['speculative']}"
+                  if c["speculative"] else "")
                + (f"  ladder-level-reached={self.level_reached}"
                   if self.level_reached else "")]
         for kind, label, detail in self.events:

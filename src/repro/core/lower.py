@@ -1196,7 +1196,8 @@ class CompiledProgram:
                  autotune_cache=None, compile_mode="whole",
                  donate=False, round_fusion=True,
                  skew_rebalance=True, skew_salting="auto",
-                 out_of_core="auto", memory_budget=None, chunk_rows=None):
+                 out_of_core="auto", memory_budget=None, chunk_rows=None,
+                 lineage=True, speculative=True):
         self.program = prog
         self.target = target
         from .op_select import CACHE_FILE, OpSelector
@@ -1213,7 +1214,9 @@ class CompiledProgram:
                                  skew_salting=skew_salting,
                                  out_of_core=out_of_core,
                                  memory_budget=memory_budget,
-                                 chunk_rows=chunk_rows)
+                                 chunk_rows=chunk_rows,
+                                 lineage=lineage,
+                                 speculative=speculative)
         self.plan = plan_program(target, prog, self.config)
         from .dist_analysis import collect
         self.dists = collect(self.plan)   # array → Dist (pass-8 annotations)
@@ -1323,6 +1326,14 @@ class CompiledProgram:
     def explain_chunked(self) -> str:
         """The chunked (out-of-core) form of the plan, ChunkLoops shown."""
         return self.chunker.explain()
+
+    def explain_lineage(self) -> str:
+        """The per-round recovery recipes (core/lineage.py, DESIGN.md §13):
+        one `lineage:` line per round naming the shard axis, the write
+        taxonomy class, each read's surviving source (rep / aligned /
+        gathered) and the producer-chain depth a restart would replay."""
+        from .lineage import explain_lineage
+        return explain_lineage(self.plan, self.program.name)
 
     def _ooc_admits(self, inputs: dict) -> bool:
         """True when this call must take the chunked tier up front: forced,
@@ -1760,7 +1771,9 @@ def compile_program(fn_or_prog, *, restrictions=True,
                     skew_salting="auto",
                     out_of_core="auto",
                     memory_budget=None,
-                    chunk_rows=None) -> CompiledProgram:
+                    chunk_rows=None,
+                    lineage=True,
+                    speculative=True) -> CompiledProgram:
     """Front door: loop program → restrictions check (Def. 3.1) →
     comprehension translation (Fig. 2) → pass pipeline (passes.py) →
     executable physical plan.
@@ -1803,7 +1816,15 @@ def compile_program(fn_or_prog, *, restrictions=True,
     OOMs or injected ones) descend to the same chunked rung.
     out_of_core: "auto" (default) = admit + descend as above; "force" =
     every run streams (A/B tests); "off" = pre-§12 ladder.  chunk_rows
-    pins the streaming tile; None derives it from the budget."""
+    pins the streaming tile; None derives it from the budget.
+
+    Surgical recovery (DESIGN.md §13): lineage=True (default) annotates
+    every round with its RoundLineage recovery recipe, so a shard lost
+    mid-run is recomputed in place instead of descending the ladder;
+    lineage=False restores the pre-§13 ladder-only behaviour.
+    speculative=True (default) lets the straggler watchdog launch ≤1
+    backup execution of a flagged round (first finisher wins);
+    speculative=False keeps the watchdog log-only."""
     prog = fn_or_prog if isinstance(fn_or_prog, Program) \
         else fn_or_prog.program
     if restrictions:
@@ -1813,4 +1834,5 @@ def compile_program(fn_or_prog, *, restrictions=True,
                            infer_distributions, dense_fastpath, op_select,
                            autotune_cache, compile_mode, donate,
                            round_fusion, skew_rebalance, skew_salting,
-                           out_of_core, memory_budget, chunk_rows)
+                           out_of_core, memory_budget, chunk_rows,
+                           lineage, speculative)

@@ -99,6 +99,11 @@ class PlanConfig:
     #                                      holds a call's memest peak under
     chunk_rows: int | None = None        # pinned streaming tile; None =
     #                                      derive from budget (memest)
+    lineage: bool = True                 # False = no RoundLineage recipes:
+    #                                      shard loss descends the ladder
+    #                                      instead of recovering surgically
+    speculative: bool = True             # False = straggler watchdog stays
+    #                                      log-only (no backup executions)
 
 
 # ---------------------------------------------------------------------------
@@ -876,6 +881,15 @@ def pass_fuse_rounds(nodes: list, prog, config) -> list:
 # the pipeline
 # ---------------------------------------------------------------------------
 
+def _pass_lineage(nodes, prog, config):
+    """Pass 12 (round-lineage): annotate every round with its RoundLineage
+    recovery recipe (core/lineage.py, DESIGN.md §13).  Runs last — a
+    recipe names the FINAL round classification and placements.  Imported
+    lazily to keep passes.py's module graph acyclic."""
+    from .lineage import pass_lineage
+    return pass_lineage(nodes, prog, config)
+
+
 PIPELINE = (
     ("identity-traversal", pass_identity_traversal),
     ("axis-key-classification", pass_classify_keys),
@@ -887,6 +901,7 @@ PIPELINE = (
     ("distribution-analysis", pass_distribution),
     ("operator-selection", pass_select_backend),
     ("round-fusion", pass_fuse_rounds),
+    ("round-lineage", _pass_lineage),
 )
 
 

@@ -143,6 +143,7 @@ class MapExpr:
     value: Expr
     key_axes: Optional[tuple[str, ...]] = None
     shardings: Optional[dict] = None   # dist_analysis annotation
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     def describe(self) -> str:
         if self.key_axes is None:
@@ -179,6 +180,7 @@ class Scatter:
     keys: tuple[Expr, ...]
     value: Expr
     shardings: Optional[dict] = None   # dist_analysis annotation
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     def describe(self) -> str:
         return f"Scatter[{self.space.pretty()}] → {self.dest} (drop OOB)"
@@ -207,6 +209,7 @@ class SegmentReduce:
     salt: Optional[int] = None   # hot-key salting static hint: spread each
     # key over S sub-destinations (key*S + salt), fold salts after; None =
     # let op_select.choose_salt decide per shape class / runtime probe
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     def describe(self) -> str:
         b = self.backend if self.backend != "auto" else \
@@ -237,6 +240,7 @@ class AxisReduce:
     value: Expr
     product: Optional[EinsumFactors] = None   # dense-fastpath MXU certificate
     shardings: Optional[dict] = None   # dist_analysis annotation
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     @property
     def contracted(self) -> tuple[str, ...]:
@@ -268,6 +272,7 @@ class EinsumContract:
     fallback: Optional[AxisReduce] = None
     candidates: tuple[str, ...] = ("einsum", "dense-grid")  # guard chain
     shardings: Optional[dict] = None      # dist_analysis annotation
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     @property
     def op(self) -> str:
@@ -299,6 +304,7 @@ class TiledMatmul:
     contract: EinsumContract
     candidates: tuple[str, ...] = ("pallas-tiled", "unpack-einsum")
     shardings: Optional[dict] = None   # dist_analysis annotation
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     @property
     def op(self) -> str:
@@ -334,6 +340,7 @@ class ScalarReduce:
     bool_any: Optional[Expr] = None  # peephole: max/min of float(bool) → any/all
     dense: bool = False              # dense-fastpath columnar certificate
     shardings: Optional[dict] = None  # dist_analysis annotation
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     def describe(self) -> str:
         tgt = self.dest if self.point is None else \
@@ -351,6 +358,7 @@ class SeqLoop:
     cond: Expr
     body: list = field(default_factory=list)
     carry: tuple[str, ...] = ()
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     def describe(self) -> str:
         return f"SeqLoop(carry={','.join(self.carry)})"
@@ -376,6 +384,7 @@ class Rebalance:
     reads: frozenset
     dest: str                          # the array being rebalanced in place
     shardings: Optional[dict] = None   # dist_analysis annotation
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     def describe(self) -> str:
         return (f"Rebalance({self.dest}) "
@@ -391,6 +400,7 @@ class Fused:
     space: IterSpace
     reads: frozenset
     parts: list = field(default_factory=list)
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     def describe(self) -> str:
         return f"Fused[{self.space.pretty()}] {{{len(self.parts)} updates}}"
@@ -409,6 +419,7 @@ class FusedRound:
     whose whole body is one region additionally runs as an ON-DEVICE
     lax.while_loop inside the same shard_map program when its condition is
     computable from the carry, eliminating the per-iteration host sync.
+    lineage = None   # RoundLineage recovery recipe (core/lineage.py, §13)
 
     The single-device executor treats the region as plain sequencing; the
     distributed executor verifies member compatibility against runtime

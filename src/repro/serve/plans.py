@@ -193,7 +193,8 @@ class PlanServer:
                  batch_round: bool = True, clock=None, prefetch: bool = True,
                  sequential_fallback: bool = True, deadline_ms: float = None,
                  queue_cap: int = None, nan_guard: bool = True,
-                 bisect: bool = True, memory_budget: int = None):
+                 bisect: bool = True, memory_budget: int = None,
+                 speculative: bool = True):
         self._programs = dict(programs)
         self.max_batch = int(max_batch)
         self.flush_s = float(flush_ms) / 1e3
@@ -239,6 +240,9 @@ class PlanServer:
         self.failed_flushes = 0            # batched calls that raised
         self.bisections = 0                # failed batches split in half
         self.poisoned = 0                  # lanes failed by the nan guard
+        # speculative re-execution of straggling flushes (DESIGN.md §13)
+        self.speculative = bool(speculative)
+        self.speculated = 0                # backup flushes launched
         # failure policy (DESIGN.md §11): server-level ledger on the
         # injected clock; with a fake clock, retry backoff never really
         # sleeps — tests replay schedules deterministically
@@ -514,18 +518,57 @@ class PlanServer:
         """One batched XLA call under the failure policy: transients retry
         at this level (batch intact); anything else raises to _dispatch,
         which bisects the batch.  The wall time feeds the straggler
-        watchdog."""
+        watchdog; a flagged straggling flush triggers speculative
+        re-execution (DESIGN.md §13) — at most ONE backup copy per flush,
+        first finisher wins, the loser is cancelled.  Both copies run the
+        same cached batched executable on the same staged batch, so
+        adopting the faster one never changes any lane's answer."""
         rids = tuple(tk.rid for tk in take)
+        label = f"batch[{Bp}]"
+
+        def call(buf=arrays):
+            return b.cp.batched_call((b.key, Bp), b.static, buf, lengths,
+                                     b.limit_bags, b.limit_arrays)
 
         def attempt():
             F.site("serve.batched_call", program=b.program, rids=rids)
-            return b.cp.batched_call((b.key, Bp), b.static, arrays, lengths,
-                                     b.limit_bags, b.limit_arrays)
+            return call()
 
+        # batched_call DONATES the mutated destinations — a backup copy
+        # cannot reuse the original flush's buffers, so its operand set
+        # is reserved before the first dispatch consumes them (a real
+        # cluster's backup task reads its own replica of the batch)
+        spare = None
+        if self.speculative:
+            spare = {n: tuple(c.copy() for c in v) if isinstance(v, tuple)
+                     else v.copy()
+                     for n, v in arrays.items()
+                     if n in b.cp._donate_names}
         t0 = self._clock()
         out = F.run_with_retries(attempt, policy=self.policy,
-                                 ledger=self.faults, label=f"batch[{Bp}]")
-        self.faults.note_time(f"batch[{Bp}]", self._clock() - t0)
+                                 ledger=self.faults, label=label)
+        dt = self._clock() - t0
+        straggled = self.faults.note_time(label, dt)
+        if straggled and self.speculative:
+            self.speculated += 1
+            t1 = self._clock()
+            backup = call({**arrays, **spare})
+            #                       no injection site: the backup flush
+            #                       dispatches to a healthy replica
+            dt2 = self._clock() - t1
+            if dt2 < dt:
+                self.faults.spec_saved_s += dt - dt2
+                self.faults.record(
+                    "speculative", label,
+                    f"backup flush won: {dt2 * 1e3:.1f}ms vs straggler "
+                    f"{dt * 1e3:.1f}ms (saved {(dt - dt2) * 1e3:.1f}ms); "
+                    f"straggler copy cancelled")
+                out = backup
+            else:
+                self.faults.record(
+                    "speculative", label,
+                    f"original flush finished first ({dt * 1e3:.1f}ms); "
+                    f"backup cancelled after {dt2 * 1e3:.1f}ms")
         return out
 
     def _flush(self, b: _Bucket, force: bool) -> int:
@@ -745,6 +788,8 @@ class PlanServer:
                 "poisoned": self.poisoned,
                 "mem_deferred": self.mem_deferred,
                 "mem_shed": self.mem_shed,
+                "speculated": self.speculated,
+                "spec_saved_ms": self.faults.spec_saved_s * 1e3,
                 "retries": self.faults.counters["retry"],
                 "flushes": sum(b.flushes for b in self._buckets.values()),
                 "batch_traced": sum(b.traced
@@ -791,7 +836,8 @@ class PlanServer:
                    f"deadline_expired={s['deadline_expired']} "
                    f"failed_flushes={s['failed_flushes']} "
                    f"bisections={s['bisections']} "
-                   f"poisoned={s['poisoned']} retries={s['retries']}")
+                   f"poisoned={s['poisoned']} retries={s['retries']} "
+                   f"speculated={s['speculated']}")
         if self.memory_budget is not None:
             from ..core.memest import fmt_bytes
             caps = "  ".join(

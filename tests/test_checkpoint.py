@@ -140,3 +140,44 @@ print("OK resharded onto", b.sharding)
                            os.path.abspath(__file__))), timeout=600)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "OK resharded" in r.stdout
+
+
+def test_torn_snapshot_skipped_to_previous_good(tmp_path):
+    """A torn write / bit flip in the NEWEST snapshot fails its crc32
+    verification and latest() falls back to the previous good snapshot
+    instead of restoring garbage."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(2, {"w": np.arange(8.0)})
+    mgr.save(4, {"w": np.arange(8.0) * 2})
+    payload = tmp_path / "step_00000004" / "params.npz"
+    raw = bytearray(payload.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF                 # one flipped byte mid-file
+    payload.write_bytes(bytes(raw))
+
+    assert mgr.verify(2) and not mgr.verify(4)
+    assert mgr.latest() == 2
+    assert mgr.skipped == [4]
+
+    step, flat, _ = mgr.restore_flat(2)
+    np.testing.assert_array_equal(flat["w"], np.arange(8.0))
+
+
+def test_snapshot_checksums_written_and_verify(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(1, {"w": np.arange(4.0)}, opt_state={"m": np.zeros(4)})
+    import json
+    with open(tmp_path / "step_00000001" / "checksums.json") as f:
+        sums = json.load(f)
+    assert set(sums) == {"params.npz", "opt.npz"}
+    assert "w" in sums["params.npz"] and "m" in sums["opt.npz"]
+    assert mgr.verify(1)
+
+
+def test_legacy_snapshot_without_checksums_accepted(tmp_path):
+    """Pre-checksum snapshots (no checksums.json) restore as-is: absence
+    of stamps is not evidence of corruption."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(3, {"w": np.ones(3)})
+    os.remove(tmp_path / "step_00000003" / "checksums.json")
+    assert mgr.verify(3)
+    assert mgr.latest() == 3

@@ -85,6 +85,62 @@ def scenarios():
         return (srv.explain_serving() + "\n" + srv.explain_faults()
                 + f"\nticket states: {states}")
 
+    def shard_loss_recovered():
+        import jax
+        from repro.core import compile_program
+        from repro.core.distributed import compile_distributed
+        from repro.core.programs import ALL
+        from repro.launch.mesh import make_test_mesh
+        ndev = len(jax.devices())
+        if ndev < 4:                  # forced to 4 in __main__; imported
+            return f"(skipped: {ndev} device(s), scenario needs 4)"
+        mesh = make_test_mesh((4,), ("data",))
+        cp = compile_program(ALL["pagerank"], round_fusion=False)
+        cp.policy.backoff_s = 0.0
+        cp.policy.max_backoff_s = 0.0
+        cp.faults.sleep = lambda s: None
+        dp = compile_distributed(cp, mesh)
+        r = np.random.default_rng(7)
+        nn = 16
+        ins = dict(E=(r.integers(0, nn, 60).astype(np.float64),
+                      r.integers(0, nn, 60).astype(np.float64)),
+                   P=np.full(nn, 1.0 / nn), NP=np.zeros(nn),
+                   C=np.zeros(nn), N=nn, num_steps=3.0, steps=0.0,
+                   b=0.85)
+        dp.run(ins)                   # warm traces: the golden is the
+        #                               ledger, not compile-time retries
+        with F.inject(F.FaultSpec("dist.shard_lost", kind="shard_lost",
+                                  nth=7, shard=2)):
+            dp.run(ins)
+        return dp.explain_faults()
+
+    def speculative_backup_win():
+        class Clock:                  # deterministic injected time — the
+            def __init__(self):      # golden must not depend on the wall
+                self.t = 0.0
+
+            def __call__(self):
+                return self.t
+
+            def advance(self, dt):
+                self.t += dt
+
+        from repro.serve import PlanServer
+        clk = Clock()
+        srv = PlanServer({"group_by": _fresh_cp()}, max_batch=1,
+                         clock=clk)
+        srv.faults.sleep = lambda s: None
+        srv.policy.backoff_s = 0.0
+        specs = [F.FaultSpec("serve.batched_call", "slow", nth=1,
+                             times=5, delay_s=0.01),
+                 F.FaultSpec("serve.batched_call", "slow", nth=6,
+                             delay_s=1.0)]
+        with F.inject(*specs, clock=clk):
+            for i in range(6):
+                srv.submit("group_by", _inputs(i, 20))
+                srv.drain()
+        return srv.explain_serving() + "\n" + srv.explain_faults()
+
     return [("clean run (no faults)", clean),
             ("transient at lower.whole_trace: retried in place",
              transient_retry),
@@ -95,7 +151,11 @@ def scenarios():
             ("persistent transient at lower.node: interpreter oracle",
              interp_oracle),
             ("serve chaos: retry + bisection + poisoned lane",
-             serve_chaos)]
+             serve_chaos),
+            ("shard lost mid-loop: lineage recovery, no ladder descent",
+             shard_loss_recovered),
+            ("straggling flush: speculative backup copy wins",
+             speculative_backup_win)]
 
 
 def main() -> None:
@@ -111,5 +171,9 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    import os
+    # before jax loads: the shard-loss scenario needs a 4-way mesh
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=4")
     sys.path.insert(0, "src")
     main()
